@@ -1,0 +1,87 @@
+"""Kernel micro-benchmarks: per-kernel call latency of the XLA oracle
+path on CPU (the Pallas path is TPU-target; interpret mode is a
+correctness harness, not a perf surface) + arithmetic-intensity napkin
+numbers used by the §Perf hillclimb.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels import ops
+
+RNG = np.random.default_rng(0)
+
+
+def _time(fn, *args, reps: int = 10) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> dict:
+    results = {}
+
+    m, n = 4096, 4096
+    w = jnp.asarray(RNG.normal(size=(m, n)), jnp.float32)
+    g = jnp.asarray(RNG.normal(size=(m, n)), jnp.float32)
+    mask = jnp.asarray(RNG.random(m) < 0.5)
+    f = jax.jit(lambda w, g, mk: ops.masked_update(w, g, mk, 0.1, mode="ref"))
+    results["masked_update_4kx4k"] = dict(
+        us=_time(f, w, g, mask) * 1e6, moved_mb=3 * m * n * 4 / 2**20
+    )
+
+    t, d, fdim = 4096, 1024, 4096
+    x = jnp.asarray(RNG.normal(size=(t, d)), jnp.float32)
+    dy = jnp.asarray(RNG.normal(size=(t, fdim)), jnp.float32)
+    mb = jnp.asarray(RNG.random(fdim // 128) < 0.5)
+    fmm = jax.jit(lambda x, dy, mb: ops.masked_matmul(x, dy, mb, 128, mode="ref"))
+    results["masked_matmul_4k_1k_4k"] = dict(
+        us=_time(fmm, x, dy, mb) * 1e6, gflop=2 * t * d * fdim / 1e9
+    )
+
+    c = 8
+    ws = jnp.asarray(RNG.normal(size=(c, m, 512)), jnp.float32)
+    ms = jnp.asarray(RNG.random((c, m)) < 0.5)
+    wt = jnp.ones((c,))
+    go = jnp.asarray(RNG.normal(size=(m, 512)), jnp.float32)
+    fagg = jax.jit(lambda ws, ms, wt, go: ops.masked_aggregate(ws, ms, wt, go, mode="ref"))
+    results["masked_aggregate_8c_4kx512"] = dict(us=_time(fagg, ws, ms, wt, go) * 1e6)
+
+    b, h, kv, s, hd = 1, 8, 2, 2048, 64
+    q = jnp.asarray(RNG.normal(size=(b, h, s, hd)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(b, kv, s, hd)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(b, kv, s, hd)), jnp.bfloat16)
+    fattn = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, mode="ref"))
+    results["attention_2k_bf16"] = dict(
+        us=_time(fattn, q, k, v, reps=5) * 1e6, gflop=4 * b * h * s * s * hd / 1e9
+    )
+    fswa = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, 256, mode="ref"))
+    results["attention_2k_swa256_bf16"] = dict(us=_time(fswa, q, k, v, reps=5) * 1e6)
+
+    l, nh, p, gg, nn = 2048, 8, 64, 1, 64
+    xs = jnp.asarray(RNG.normal(size=(1, l, nh, p)), jnp.float32)
+    dt = jnp.asarray(RNG.random((1, l, nh)) * 0.1, jnp.float32)
+    A = -jnp.ones((nh,))
+    B = jnp.asarray(RNG.normal(size=(1, l, gg, nn)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(1, l, gg, nn)), jnp.float32)
+    fssd = jax.jit(lambda *a: ops.ssd_scan(*a, mode="ref"))
+    results["ssd_scan_2k"] = dict(us=_time(fssd, xs, dt, A, B, C, reps=5) * 1e6)
+
+    rows = [[k, f"{v['us']:.0f}"] for k, v in results.items()]
+    print("\n== Kernel micro-bench (XLA oracle path, CPU) ==")
+    print(common.fmt_table(rows, ["kernel", "us/call"]))
+    common.save_result("kernel_bench", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

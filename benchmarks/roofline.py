@@ -1,0 +1,94 @@
+"""§Roofline: render the roofline table from dry-run JSONL records.
+
+The dry-run (launch/dryrun.py, separate process — it needs 512 host
+devices) appends one JSON record per (arch, shape, mesh). This module
+aggregates them into the EXPERIMENTS.md §Roofline table and flags the
+dominant term per pair.
+
+  PYTHONPATH=src python -m benchmarks.roofline --jsonl dryrun_results.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+from benchmarks import common
+
+
+def load(jsonl_path: str) -> List[Dict]:
+    recs = []
+    with open(jsonl_path) as f:
+        for line in f:
+            if line.strip():
+                recs.append(json.loads(line))
+    # keep the latest record per (arch, shape, mesh)
+    dedup = {}
+    for r in recs:
+        dedup[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(dedup.values())
+
+
+def render(recs: List[Dict]) -> str:
+    rows = []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        rows.append(
+            [
+                r["arch"],
+                r["shape"],
+                r["mesh"],
+                f"{r['compute_s_term']*1e3:.2f}",
+                f"{r['memory_s_term']*1e3:.2f}",
+                f"{r['collective_s_term']*1e3:.2f}",
+                r["dominant"],
+                f"{r['useful_flops_ratio']:.3f}",
+                f"{r['bytes_per_device']/2**30:.1f}",
+            ]
+        )
+    return common.fmt_table(
+        rows,
+        ["arch", "shape", "mesh", "compute ms", "memory ms", "collective ms", "bound", "useful-F", "GiB/dev"],
+    )
+
+
+def markdown(recs: List[Dict]) -> str:
+    head = (
+        "| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) "
+        "| bound | MODEL/HLO FLOPs | GiB/dev |\n|---|---|---|---|---|---|---|---|---|"
+    )
+    lines = [head]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compute_s_term']*1e3:.2f} "
+            f"| {r['memory_s_term']*1e3:.2f} | {r['collective_s_term']*1e3:.2f} | {r['dominant']} "
+            f"| {r['useful_flops_ratio']:.3f} | {r['bytes_per_device']/2**30:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+def run(jsonl_path: str = None) -> dict:
+    jsonl_path = jsonl_path or os.path.join(os.path.dirname(__file__), "..", "dryrun_results.jsonl")
+    if not os.path.exists(jsonl_path):
+        print(f"[roofline] no dry-run records at {jsonl_path} — run launch/dryrun.py first")
+        return dict(records=0)
+    recs = load(jsonl_path)
+    print("\n== Roofline terms (from compiled dry-run; per-device) ==")
+    print(render(recs))
+    by_bound: Dict[str, int] = {}
+    for r in recs:
+        by_bound[r["dominant"]] = by_bound.get(r["dominant"], 0) + 1
+    payload = dict(records=len(recs), dominant_histogram=by_bound)
+    common.save_result("roofline", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default=None)
+    ap.add_argument("--markdown", action="store_true")
+    a = ap.parse_args()
+    if a.markdown and a.jsonl:
+        print(markdown(load(a.jsonl)))
+    else:
+        run(a.jsonl)

@@ -1,0 +1,53 @@
+"""Benchmark entry point: one benchmark per paper table/figure plus the
+kernel micro-bench and the roofline aggregation.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks import (
+    common,
+    fig5_jaccard,
+    kernel_bench,
+    roofline,
+    table1_accuracy,
+    table2_train_cost,
+    table3_comm,
+    table4_early_stop,
+)
+
+BENCHES = {
+    "table1": lambda scale: table1_accuracy.run(scale),
+    "table2": lambda scale: table2_train_cost.run(scale),
+    "table3": lambda scale: table3_comm.run(scale),
+    "table4": lambda scale: table4_early_stop.run(scale),
+    "fig5": lambda scale: fig5_jaccard.run(scale),
+    "kernels": lambda scale: kernel_bench.run(),
+    "roofline": lambda scale: roofline.run(),
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale runs (slow)")
+    ap.add_argument("--only", default=None, help="comma-separated bench names")
+    args = ap.parse_args(argv)
+    scale = common.FULL if args.full else common.QUICK
+    names = args.only.split(",") if args.only else list(BENCHES)
+    summary = {}
+    for name in names:
+        t0 = time.perf_counter()
+        print(f"\n########## {name} ##########")
+        summary[name] = BENCHES[name](scale)
+        summary[name]["bench_wall_s"] = round(time.perf_counter() - t0, 1)
+    print("\n== summary ==")
+    print(json.dumps({k: v.get("bench_wall_s") for k, v in summary.items()}, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

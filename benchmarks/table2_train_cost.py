@@ -1,0 +1,44 @@
+"""Paper Table 2: training time. FedSPU trains FULL models (frozen
+neurons still do forward) while dropout trains pruned ones — the paper
+claims the overhead is minor (1.01×–1.11× the fastest dropout).
+
+Scaled analogue: steady-state jitted round time per method (compile
+excluded), same cohort/batch. On TPU the Pallas ``masked_matmul`` skips
+frozen output blocks in backward; on CPU XLA sees the same masked graph.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+
+METHODS = ("fedspu", "fjord", "fedmp", "hermes", "prunefl")
+
+
+def run(scale=None, dataset: str = "emnist", alpha: float = 0.5, reps: int = 5, seed: int = 0) -> dict:
+    scale = scale or common.QUICK
+    times = {}
+    for method in METHODS:
+        server = common.make_server(dataset, method, alpha, scale, seed=seed)
+        server.run_round(0)  # compile + warmup
+        t0 = time.perf_counter()
+        for t in range(1, reps + 1):
+            server.run_round(t)
+        jax.block_until_ready(jax.tree.leaves(server.global_params)[0])
+        times[method] = (time.perf_counter() - t0) / reps
+    fastest_dropout = min(v for k, v in times.items() if k != "fedspu")
+    ratio = times["fedspu"] / fastest_dropout
+    rows = [[m, f"{v*1e3:.1f} ms"] for m, v in times.items()]
+    print("\n== Table 2 (steady-state round time, scaled) ==")
+    print(common.fmt_table(rows, ["method", "round time"]))
+    print(f"FedSPU / fastest-dropout ratio: {ratio:.3f} (paper: 1.01–1.11)")
+    payload = dict(round_time_s=times, fedspu_over_fastest_dropout=round(ratio, 3))
+    common.save_result("table2_train_cost", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

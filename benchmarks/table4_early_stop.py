@@ -1,0 +1,39 @@
+"""Paper Table 4 / Fig. 13: FedSPU vs FedSPU+ES — rounds to
+termination, accuracy delta, and combined compute+comm cost saving
+(the paper reports 25–71 % fewer rounds at bounded accuracy loss).
+"""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(scale=None, dataset: str = "emnist", alphas=(0.1, 0.5), seed: int = 0) -> dict:
+    scale = scale or common.QUICK
+    table = {}
+    for alpha in alphas:
+        base = common.make_server(dataset, "fedspu", alpha, scale, seed=seed)
+        h0 = base.run()
+        es = common.make_server(dataset, "fedspu", alpha, scale, early_stopping=True, seed=seed)
+        h1 = es.run()
+        table[f"alpha={alpha}"] = dict(
+            rounds=h0.rounds_run,
+            rounds_es=h1.rounds_run,
+            acc=round(h0.final_accuracy, 4),
+            acc_es=round(h1.final_accuracy, 4),
+            comm_gb=round(h0.total_comm_gb, 4),
+            comm_gb_es=round(h1.total_comm_gb, 4),
+            cost_saving=round(1 - h1.total_comm_gb / max(1e-12, h0.total_comm_gb), 3),
+        )
+    rows = [
+        [k, v["rounds"], v["rounds_es"], v["acc"], v["acc_es"], f"{v['cost_saving']*100:.0f}%"]
+        for k, v in table.items()
+    ]
+    print("\n== Table 4 (early stopping, scaled) ==")
+    print(common.fmt_table(rows, ["distribution", "rounds", "rounds+ES", "acc", "acc+ES", "saving"]))
+    payload = dict(table=table)
+    common.save_result("table4_early_stop", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Serving example: batched generation from a (reduced) assigned arch.
+
+Builds a mamba2-family model (O(1)-state decode — the long-context
+serving case), prefills a batch of prompts and generates continuations
+with the KV/SSM cache machinery the decode_32k / long_500k dry-run
+shapes exercise at pod scale.
+
+  PYTHONPATH=src python examples/serve_personalized.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.launch.serve import generate
+from repro.models import model as tmodel
+
+
+def main():
+    cfg = reduce_config(get_config("mamba2-370m"))
+    params = tmodel.init_params(cfg, jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    batch, prompt_len, gen_len = 4, 32, 16
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32)
+
+    print(f"serving {cfg.name}: batch={batch} prompt={prompt_len} gen={gen_len}")
+    out = generate(params, cfg, prompts, gen_len)
+    for i in range(batch):
+        print(f"req[{i}] -> {np.asarray(out[i]).tolist()}")
+
+    # per-request positions are tracked in the cache: verify decode is
+    # deterministic given the same prompt
+    out2 = generate(params, cfg, prompts, gen_len)
+    assert (np.asarray(out) == np.asarray(out2)).all()
+    print("deterministic decode: OK")
+
+
+if __name__ == "__main__":
+    main()

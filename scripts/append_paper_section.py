@@ -1,0 +1,97 @@
+"""Append EXPERIMENTS.md §Paper from benchmarks/results/*.json
+(run after `python -m benchmarks.run`)."""
+import json
+import os
+
+RES = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "results")
+OUT = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+
+def load(name):
+    with open(os.path.join(RES, f"{name}.json")) as f:
+        return json.load(f)
+
+
+def main():
+    t1 = load("table1_accuracy")
+    t2 = load("table2_train_cost")
+    t3 = load("table3_comm")
+    t4 = load("table4_early_stop")
+    f5 = load("fig5_jaccard")
+
+    lines = ["\n## §Paper — scaled validation of the paper's claims\n"]
+    lines.append(
+        "CPU container + no offline datasets ⇒ the paper's protocol at reduced\n"
+        "scale (16 clients, 30 rounds, synthetic class-conditional non-iid data,\n"
+        "Dirichlet α, 5 p_k clusters; `benchmarks/common.py`). Directional\n"
+        "claims validated; absolute numbers are not comparable to 500-round\n"
+        "Jetson runs. `--full` approaches paper scale.\n"
+    )
+
+    methods = ["fedspu", "fjord", "fedmp", "hermes", "prunefl"]
+    lines.append("### Table 1 analogue — final personalized accuracy (CIFAR-like)\n")
+    lines.append("| distribution | " + " | ".join(methods) + " | FedSPU wins |")
+    lines.append("|---|" + "---|" * (len(methods) + 1))
+    for dist, row in t1["table"].items():
+        best_other = max(v for k, v in row.items() if k != "fedspu")
+        win = "✓" if row["fedspu"] >= best_other else "✗"
+        lines.append(
+            f"| {dist} | " + " | ".join(f"{row[m]:.3f}" for m in methods) + f" | {win} |"
+        )
+    lines.append(
+        f"\nFedSPU beats every dropout baseline in {t1['fedspu_wins']}/{t1['cases']} "
+        "distributions (paper: +7.57 % avg over the best dropout).\n"
+    )
+
+    lines.append("### Table 2 analogue — steady-state round time (compile excluded)\n")
+    lines.append("| method | round time (ms) |")
+    lines.append("|---|---|")
+    for m, v in t2["round_time_s"].items():
+        lines.append(f"| {m} | {v*1e3:.0f} |")
+    lines.append(
+        f"\nFedSPU / fastest-dropout = **{t2['fedspu_over_fastest_dropout']}×** "
+        "(paper: 1.01–1.11×) — freezing's full-model forward adds little, as the "
+        "paper argues (backward dominates).\n"
+    )
+
+    lines.append("### Table 3 analogue — communication volume\n")
+    lines.append("| method | total comm (GB) |")
+    lines.append("|---|---|")
+    for m, v in t3["total_comm_gb"].items():
+        lines.append(f"| {m} | {v:.4f} |")
+    lines.append(
+        f"\nmax/min spread {t3['max_over_min']}× — FedSPU communicates the same "
+        "active-parameter volume as dropout at equal p_k (paper Table 3).\n"
+    )
+
+    lines.append("### Table 4 analogue — early stopping\n")
+    lines.append("| distribution | rounds | rounds+ES | acc | acc+ES | cost saving |")
+    lines.append("|---|---|---|---|---|---|")
+    for dist, row in t4["table"].items():
+        lines.append(
+            f"| {dist} | {row['rounds']} | {row['rounds_es']} | {row['acc']:.3f} "
+            f"| {row['acc_es']:.3f} | {row['cost_saving']*100:.0f}% |"
+        )
+    lines.append("\n(paper: 25–71 % cost reduction at bounded accuracy loss)\n")
+
+    lines.append("### Fig. 5 analogue — sub-model Jaccard similarity\n")
+    lines.append("| distribution | importance masks (Hermes) | random masks (FedSPU) | E[random] |")
+    lines.append("|---|---|---|---|")
+    for dist, row in f5["table"].items():
+        lines.append(
+            f"| {dist} | {row['importance_jaccard']:.3f} | {row['random_jaccard']:.3f} "
+            f"| {row['expected_random']:.3f} |"
+        )
+    lines.append(
+        "\nImportance-pruned architectures diverge across clients under data "
+        "bias (the paper's Fig. 5 motivation); FedSPU's random masks sit at "
+        "the p/(2−p) expectation by construction.\n"
+    )
+
+    with open(OUT, "a") as f:
+        f.write("\n".join(lines))
+    print(f"appended §Paper to {OUT}")
+
+
+if __name__ == "__main__":
+    main()

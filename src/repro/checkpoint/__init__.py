@@ -1,0 +1,5 @@
+from repro.checkpoint.npz import (  # noqa: F401
+    latest_step,
+    restore_tree,
+    save_tree,
+)

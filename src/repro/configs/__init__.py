@@ -1,0 +1,84 @@
+"""Config registry: ``get_config(arch_id)``, ``reduce_config`` (smoke tests),
+input-shape registry re-export."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    BlockSpec,
+    FLConfig,
+    InputShape,
+    ModelConfig,
+    Stage,
+    client_ratio,
+)
+
+from repro.configs.internlm2_20b import CONFIG as _internlm2
+from repro.configs.kimi_k2_1t_a32b import CONFIG as _kimi
+from repro.configs.qwen1_5_110b import CONFIG as _qwen
+from repro.configs.gemma3_4b import CONFIG as _gemma3
+from repro.configs.minitron_8b import CONFIG as _minitron
+from repro.configs.mamba2_370m import CONFIG as _mamba2
+from repro.configs.internvl2_76b import CONFIG as _internvl
+from repro.configs.jamba_v0_1_52b import CONFIG as _jamba
+from repro.configs.granite_moe_3b_a800m import CONFIG as _granite
+from repro.configs.musicgen_medium import CONFIG as _musicgen
+
+ARCHS = {
+    c.name: c
+    for c in (
+        _internlm2,
+        _kimi,
+        _qwen,
+        _gemma3,
+        _minitron,
+        _mamba2,
+        _internvl,
+        _jamba,
+        _granite,
+        _musicgen,
+    )
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def reduce_config(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family variant for CPU smoke tests:
+    ≤2 layers, d_model ≤ 512, ≤4 experts."""
+    # keep the first ≤2 blocks of the first stage's pattern (family-preserving)
+    pattern = cfg.stages[0].pattern[:2]
+    if len(pattern) == 1 and len(cfg.stages[0].pattern) == 1 and cfg.stages[0].repeats > 1:
+        stages = (Stage(pattern, 2),)
+    else:
+        stages = (Stage(pattern, 1),)
+    # for heterogeneous patterns make sure an attn and/or mamba block survives
+    kinds = {b.mixer for b in pattern}
+    full_kinds = {b.mixer for st in cfg.stages for b in st.pattern}
+    if "attn" in full_kinds and "attn" not in kinds:
+        attn_block = next(
+            b for st in cfg.stages for b in st.pattern if b.mixer == "attn"
+        )
+        stages = (Stage((pattern[0], attn_block), 1),)
+    return cfg.replace(
+        name=cfg.name + "-smoke",
+        d_model=256,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=64,
+        d_ff=512,
+        vocab_size=512,
+        stages=stages,
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        moe_topk=min(cfg.moe_topk, 2) if cfg.moe_topk else 0,
+        moe_dff=128 if cfg.n_experts else 0,
+        ssm_state=32 if cfg.ssm_state else 0,
+        ssm_headdim=32,
+        dtype="float32",
+        cohort_size=4,
+    )

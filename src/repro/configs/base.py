@@ -1,0 +1,209 @@
+"""Configuration dataclasses for architectures, input shapes and FL runs.
+
+A model is a sequence of ``Stage``s; each stage scans a short heterogeneous
+``pattern`` of blocks over ``repeats`` (stacked parameters), keeping HLO size
+O(len(pattern)) regardless of depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Block / stage / model configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BlockSpec:
+    """One decoder block: a (mixer, ffn) pair. Either may be None."""
+
+    mixer: Optional[str]  # "attn" | "mamba" | None
+    ffn: Optional[str]  # "mlp" | "moe" | None
+    window: Optional[int] = None  # sliding-window size for attn mixers
+
+
+@dataclass(frozen=True)
+class Stage:
+    pattern: Tuple[BlockSpec, ...]
+    repeats: int
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.pattern) * self.repeats
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio | cnn
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    stages: Tuple[Stage, ...]
+    source: str = ""  # citation for the config
+
+    # attention extras
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+
+    # MoE extras
+    n_experts: int = 0
+    moe_topk: int = 0
+    moe_dff: int = 0
+    capacity_factor: float = 1.25
+
+    # Mamba-2 / SSD extras
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    d_conv: int = 4
+    ssm_ngroups: int = 1
+
+    # misc
+    norm_eps: float = 1e-5
+    input_mode: str = "tokens"  # "tokens" | "embeddings"
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = True
+
+    # FL / distribution knobs
+    cohort_size: int = 16  # clients per FedSPU round on the pod
+    long_context_window: int = 4096  # SWA window used for long_500k on
+    # pure full-attention archs (see DESIGN.md §7)
+
+    # §Perf optimization flags (beyond-paper; default off = faithful
+    # baseline). See EXPERIMENTS.md §Perf for the iteration log.
+    remat: bool = False  # activation-checkpoint each scanned block
+    moe_groups: int = 0  # token-group MoE dispatch (0 = single group)
+    compact_agg: bool = False  # unit-granular den in Fig. 9 aggregation
+    attn_chunk: int = 1024  # query-chunk size of the XLA attention path
+    # (the Pallas flash kernel replaces this path on real TPU)
+    head_aligned_tp: bool = False  # replicate q/k/v/o when a model shard
+    # would hold a fraction of a head (avoids partial-sum logits)
+
+    # ------------------------------------------------------------------
+    @property
+    def n_layers(self) -> int:
+        return sum(s.n_layers for s in self.stages)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.ssm_ngroups * self.ssm_state
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + blocks)."""
+        n = self.vocab_size * self.d_model
+        if not self.tie_embeddings:
+            n += self.vocab_size * self.d_model
+        n += self.d_model  # final norm
+        for st in self.stages:
+            per_pattern = 0
+            for bs in st.pattern:
+                per_pattern += _block_params(self, bs)
+            n += per_pattern * st.repeats
+        return n
+
+    def active_param_count(self) -> int:
+        """Params active per token (MoE counts top-k experts only)."""
+        n = self.vocab_size * self.d_model + self.d_model
+        for st in self.stages:
+            per = 0
+            for bs in st.pattern:
+                per += _block_params(self, bs, active_only=True)
+            n += per * st.repeats
+        return n
+
+
+def _block_params(cfg: ModelConfig, bs: BlockSpec, active_only: bool = False) -> int:
+    n = 0
+    d = cfg.d_model
+    if bs.mixer == "attn":
+        qd = cfg.n_heads * cfg.head_dim
+        kvd = cfg.n_kv_heads * cfg.head_dim
+        n += d  # norm
+        n += d * qd + 2 * d * kvd + qd * d
+        if cfg.qkv_bias:
+            n += qd + 2 * kvd
+    elif bs.mixer == "mamba":
+        din, nst, ng, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_nheads
+        n += d  # norm
+        n += d * (2 * din + 2 * ng * nst + nh)  # in_proj
+        n += cfg.d_conv * cfg.conv_dim  # conv
+        n += 3 * nh  # A_log, D, dt_bias
+        n += din  # gated norm
+        n += din * d  # out_proj
+    if bs.ffn == "mlp":
+        n += d + 3 * d * cfg.d_ff
+    elif bs.ffn == "moe":
+        e = cfg.moe_topk if active_only else cfg.n_experts
+        n += d + cfg.n_experts * d  # norm + router
+        n += e * 3 * d * cfg.moe_dff
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# FL run config (paper-faithful knobs)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FLConfig:
+    """Paper §5.1 settings (defaults match the paper)."""
+
+    n_clients: int = 100
+    clients_per_round: int = 10
+    max_rounds: int = 500
+    local_epochs: int = 5
+    lr: float = 0.1
+    batch_size: int = 16
+    dirichlet_alpha: float = 0.1
+    split_lambda: float = 0.7  # train/test split factor (Eq. 6 lambda)
+    # active-ratio clusters (paper: 5 uniform clusters)
+    p_clusters: Tuple[float, ...] = (0.2, 0.4, 0.6, 0.8, 1.0)
+    method: str = "fedspu"  # fedspu|fjord|fedmp|hermes|prunefl|random
+    early_stopping: bool = False
+    seed: int = 0
+
+
+def client_ratio(fl: FLConfig, client_id: int) -> float:
+    """p_k for a client: 5 uniform clusters as in the paper."""
+    n_clusters = len(fl.p_clusters)
+    cluster = client_id * n_clusters // fl.n_clients
+    return fl.p_clusters[min(cluster, n_clusters - 1)]

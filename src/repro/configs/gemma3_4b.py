@@ -1,0 +1,25 @@
+"""Gemma-3 4B — 5:1 local:global attention, 128k context
+[hf:google/gemma-3-1b-pt family]. 34 layers = 5×(5 local + 1 global) + 4 local.
+Local layers use a 1024-token sliding window (ring-buffer KV at decode)."""
+from repro.configs.base import BlockSpec, ModelConfig, Stage
+
+_LOCAL = BlockSpec("attn", "mlp", window=1024)
+_GLOBAL = BlockSpec("attn", "mlp")
+
+CONFIG = ModelConfig(
+    name="gemma3-4b",
+    family="dense",
+    d_model=2560,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=10240,
+    vocab_size=262144,
+    stages=(
+        Stage((_LOCAL, _LOCAL, _LOCAL, _LOCAL, _LOCAL, _GLOBAL), 5),
+        Stage((_LOCAL,), 4),
+    ),
+    rope_theta=1e6,
+    source="hf:google/gemma-3-1b-pt (scaled per assignment)",
+    cohort_size=16,
+)

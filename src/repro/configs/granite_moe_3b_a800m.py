@@ -1,0 +1,20 @@
+"""Granite-MoE 3B (800M active) — 40 experts top-8
+[hf:ibm-granite/granite-3.0-1b-a400m-base family, scaled per assignment]."""
+from repro.configs.base import BlockSpec, ModelConfig, Stage
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=512,
+    vocab_size=49155,
+    stages=(Stage((BlockSpec("attn", "moe"),), 32),),
+    n_experts=40,
+    moe_topk=8,
+    moe_dff=512,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+    cohort_size=16,
+)

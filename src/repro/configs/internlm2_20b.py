@@ -1,0 +1,17 @@
+"""InternLM2-20B — dense GQA decoder [arXiv:2403.17297]."""
+from repro.configs.base import BlockSpec, ModelConfig, Stage
+
+CONFIG = ModelConfig(
+    name="internlm2-20b",
+    family="dense",
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=92544,
+    stages=(Stage((BlockSpec("attn", "mlp"),), 48),),
+    rope_theta=1e6,
+    source="arXiv:2403.17297",
+    cohort_size=16,
+)

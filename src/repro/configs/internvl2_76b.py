@@ -1,0 +1,21 @@
+"""InternVL2-76B — InternViT-6B + InternLM2/LLaMA-76B backbone
+[arXiv:2404.16821]. Per the VLM carve-out, the ViT+projector frontend is a
+stub: ``input_specs`` feeds precomputed patch+text embeddings of shape
+[B, S, d_model]; only the 80-layer language decoder is implemented."""
+from repro.configs.base import BlockSpec, ModelConfig, Stage
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    stages=(Stage((BlockSpec("attn", "mlp"),), 80),),
+    input_mode="embeddings",
+    rope_theta=5e5,
+    source="arXiv:2404.16821",
+    cohort_size=4,
+)

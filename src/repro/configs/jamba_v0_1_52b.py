@@ -1,0 +1,32 @@
+"""Jamba v0.1 52B — Mamba+attention 1:7 interleave, MoE 16e top-2
+[arXiv:2403.19887]. Block of 8 layers: attention at position 3, Mamba
+elsewhere; MoE FFN on odd positions, dense FFN on even positions; ×4."""
+from repro.configs.base import BlockSpec, ModelConfig, Stage
+
+_P = tuple(
+    BlockSpec(
+        "attn" if i == 3 else "mamba",
+        "moe" if i % 2 == 1 else "mlp",
+    )
+    for i in range(8)
+)
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    stages=(Stage(_P, 4),),
+    n_experts=16,
+    moe_topk=2,
+    moe_dff=14336,
+    ssm_state=16,
+    ssm_headdim=64,
+    ssm_expand=2,
+    source="arXiv:2403.19887",
+    cohort_size=8,
+)

@@ -1,0 +1,25 @@
+"""Kimi K2 — trillion-param MoE, 384 experts top-8 [arXiv:2501.kimi2].
+
+Per the assignment table: 61L, d_model=7168, 64H (GQA kv=8), expert d_ff=2048,
+vocab=163840. Sequential client mode (DESIGN.md §8): per-client full local
+models at 1T params force a small, FSDP-sharded cohort.
+"""
+from repro.configs.base import BlockSpec, ModelConfig, Stage
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=112,
+    d_ff=2048,
+    vocab_size=163840,
+    stages=(Stage((BlockSpec("attn", "moe"),), 61),),
+    n_experts=384,
+    moe_topk=8,
+    moe_dff=2048,
+    rope_theta=5e6,
+    source="arXiv:2501.kimi2 (paper-table)",
+    cohort_size=2,
+)

@@ -1,0 +1,19 @@
+"""Mamba-2 370M — attention-free SSD (state-space duality) [arXiv:2405.21060]."""
+from repro.configs.base import BlockSpec, ModelConfig, Stage
+
+CONFIG = ModelConfig(
+    name="mamba2-370m",
+    family="ssm",
+    d_model=1024,
+    n_heads=0,
+    n_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50280,
+    stages=(Stage((BlockSpec("mamba", None),), 48),),
+    ssm_state=128,
+    ssm_headdim=64,
+    ssm_expand=2,
+    source="arXiv:2405.21060",
+    cohort_size=16,
+)

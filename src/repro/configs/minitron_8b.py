@@ -1,0 +1,16 @@
+"""Minitron-8B — width-pruned Nemotron-4 [arXiv:2407.14679]."""
+from repro.configs.base import BlockSpec, ModelConfig, Stage
+
+CONFIG = ModelConfig(
+    name="minitron-8b",
+    family="dense",
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=256000,
+    stages=(Stage((BlockSpec("attn", "mlp"),), 32),),
+    source="arXiv:2407.14679",
+    cohort_size=16,
+)

@@ -1,0 +1,20 @@
+"""MusicGen-medium — decoder-only transformer over EnCodec tokens
+[arXiv:2306.05284]. The EnCodec audio codec is the stubbed frontend
+(per the [audio] carve-out): ``input_specs`` provides codebook token ids
+(vocab 2048); only the 48-layer decoder backbone is implemented.
+24 heads with kv=24 (i.e. full MHA)."""
+from repro.configs.base import BlockSpec, ModelConfig, Stage
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab_size=2048,
+    stages=(Stage((BlockSpec("attn", "mlp"),), 48),),
+    source="arXiv:2306.05284",
+    cohort_size=16,
+)

@@ -1,0 +1,18 @@
+"""Qwen1.5-110B — dense GQA with QKV bias [hf:Qwen/Qwen1.5-0.5B family]."""
+from repro.configs.base import BlockSpec, ModelConfig, Stage
+
+CONFIG = ModelConfig(
+    name="qwen1.5-110b",
+    family="dense",
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=49152,
+    vocab_size=152064,
+    stages=(Stage((BlockSpec("attn", "mlp"),), 80),),
+    qkv_bias=True,
+    rope_theta=1e6,
+    source="hf:Qwen/Qwen1.5-0.5B (scaled per assignment)",
+    cohort_size=4,
+)

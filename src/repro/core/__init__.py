@@ -1,0 +1,15 @@
+# FedSPU — the paper's primary contribution: stochastic-parameter-update
+# personalized FL (masks, round engine, dropout baselines, early stopping,
+# server driver).
+from repro.core import early_stopping, fedspu, masks, server  # noqa: F401
+from repro.core.fedspu import (  # noqa: F401
+    METHODS,
+    FLModel,
+    aggregate,
+    bind_cnn,
+    bind_transformer,
+    client_round,
+    fl_round_scan,
+    fl_round_vmap,
+    local_train,
+)

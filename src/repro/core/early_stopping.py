@@ -1,0 +1,41 @@
+"""Early stopping (paper §3.2, Algorithm 2).
+
+Each client tracks L_t = λ·L_train + (1-λ)·L_test; when L_t is
+non-decreasing (L_t > L_{t-1}) the client stops and leaves FL. The run
+terminates when every client has stopped.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+
+@dataclass
+class ESState:
+    prev_loss: np.ndarray  # [N] float, +inf before first participation
+    stopped: np.ndarray  # [N] bool
+
+    @staticmethod
+    def init(n_clients: int) -> "ESState":
+        return ESState(np.full(n_clients, np.inf), np.zeros(n_clients, bool))
+
+    @property
+    def all_stopped(self) -> bool:
+        return bool(self.stopped.all())
+
+
+def combined_loss(train_loss, test_loss, lam: float):
+    """Eq. 6."""
+    return lam * train_loss + (1.0 - lam) * test_loss
+
+
+def update(state: ESState, client_ids, losses) -> ESState:
+    """Apply the paper's rule for the round's cohort."""
+    prev = state.prev_loss.copy()
+    stopped = state.stopped.copy()
+    for cid, loss in zip(np.asarray(client_ids), np.asarray(losses)):
+        if loss > prev[cid]:
+            stopped[cid] = True
+        prev[cid] = loss
+    return ESState(prev, stopped)

@@ -1,0 +1,258 @@
+"""FedSPU round engine (Algorithm 1/2) + federated-dropout baselines.
+
+One federated round, fully jitted:
+
+  1. per-client unit masks from p_k    (server-side sampling, Fig. 8a ①)
+  2. merge: active <- global, frozen <- personal   (FedSPU)
+     or prune: inactive params zeroed              (dropout baselines)
+  3. local SGD with masked gradients (Eq. 4/5), ``local_steps`` minibatches
+  4. masked weighted aggregation (Fig. 9) — a sum over the client axis,
+     which on the pod lowers to the all-reduce that is FedSPU's
+     communication signature.
+
+Two cohort layouts (DESIGN.md §8): ``vmap`` (clients spatial, on the
+``data`` mesh axis) and ``scan`` (clients sequential, params FSDP-sharded —
+used by the largest archs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as M
+
+METHODS = ("fedspu", "random", "fjord", "fedmp", "hermes", "prunefl")
+
+
+@dataclass(frozen=True)
+class FLModel:
+    """Model plumbing the engine needs (built by bind_* helpers below)."""
+
+    loss_fn: Callable[[Any, Any], Any]  # (params, batch) -> scalar
+    unit_counts: Any  # int-leaf tree
+    repeats_shapes: Any  # parallel tree of leading shapes (or None)
+    expand: Callable[[Any, Any], Any]  # (params, unit_masks) -> mask tree
+    importance: Optional[Callable[[Any, int], Any]] = None  # (tree, ord) -> scores
+
+
+def normalize_mask_tree(params, mask_tree):
+    """Replace python-True leaves with broadcastable scalar bool arrays
+    shaped (1,)*ndim so the tree is vmap/stack friendly."""
+    lp, treedef = jax.tree.flatten(params)
+    lm = treedef.flatten_up_to(mask_tree)
+    out = [
+        jnp.ones((1,) * p.ndim, bool) if m is True else m for p, m in zip(lp, lm)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+def sample_client_masks(flm: FLModel, global_params, key, p_ratio, method: str, batch=None):
+    """Unit masks for one client according to ``method``."""
+    if method in ("fedspu", "random"):
+        return M.sample_unit_masks(
+            key, flm.unit_counts, p_ratio, repeats_shapes=flm.repeats_shapes, method="random"
+        )
+    if method == "fjord":
+        return M.sample_unit_masks(
+            key, flm.unit_counts, p_ratio, repeats_shapes=flm.repeats_shapes, method="ordered"
+        )
+    if method in ("fedmp", "hermes"):
+        scores = flm.importance(global_params, 1 if method == "fedmp" else 2)
+    elif method == "prunefl":
+        grads = jax.grad(flm.loss_fn)(global_params, batch)
+        scores = flm.importance(grads, 2)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    return M.sample_unit_masks(
+        key,
+        flm.unit_counts,
+        p_ratio,
+        repeats_shapes=flm.repeats_shapes,
+        scores_tree=scores,
+        method="importance",
+    )
+
+
+def local_train(flm: FLModel, params, mask_tree, batches, lr):
+    """Masked SGD over ``batches`` (leading axis = steps). Eq. 4/5."""
+
+    def step(p, batch):
+        loss, grads = jax.value_and_grad(flm.loss_fn)(p, batch)
+        grads = M.mask_grads(grads, mask_tree)
+        p = jax.tree.map(lambda w, g: (w - lr * g.astype(jnp.float32)).astype(w.dtype), p, grads)
+        return p, loss
+
+    params, losses = jax.lax.scan(step, params, batches)
+    return params, losses.mean()
+
+
+def client_round(flm: FLModel, global_params, local_params, key, p_ratio, batches, method: str, lr):
+    """One client's round. Returns (trained_params, unit_masks, train_loss)."""
+    first_batch = jax.tree.map(lambda x: x[0], batches)
+    unit_masks = sample_client_masks(flm, global_params, key, p_ratio, method, first_batch)
+    mask_tree = normalize_mask_tree(global_params, flm.expand(global_params, unit_masks))
+    if method == "fedspu":
+        start = M.merge_active(global_params, local_params, mask_tree)
+    else:
+        start = M.apply_param_mask(global_params, mask_tree)
+    trained, train_loss = local_train(flm, start, mask_tree, batches, lr)
+    active_frac = M.mask_fraction(mask_tree, global_params)
+    return trained, unit_masks, train_loss, active_frac
+
+
+def aggregate(flm: FLModel, global_params, trained_stacked, unit_masks_stacked, weights, compact: bool = False):
+    """Fig. 9: per-parameter weighted average over the clients that held the
+    parameter active; parameters nobody trained keep the old global value.
+
+    trained_stacked / unit_masks_stacked have a leading client axis C;
+    ``weights`` is [C] (n_k, zero to drop a client e.g. after early stop).
+
+    ``compact=True`` (§Perf): the denominator is accumulated at the
+    compact (broadcastable) mask shape instead of the full parameter
+    shape, and the mask is applied by select rather than a materialized
+    f32 product — halves the aggregation all-reduce volume and removes a
+    param-sized f32 temp per client.
+    """
+    mask_trees = jax.vmap(
+        lambda p, um: normalize_mask_tree(p, flm.expand(p, um))
+    )(trained_stacked, unit_masks_stacked)
+
+    def agg_naive(g, pc, mc):
+        w = weights.reshape(weights.shape + (1,) * (pc.ndim - 1)).astype(jnp.float32)
+        mf = jnp.broadcast_to(mc, pc.shape).astype(jnp.float32)
+        num = jnp.sum(w * mf * pc.astype(jnp.float32), axis=0)
+        den = jnp.sum(w * mf, axis=0)
+        return jnp.where(den > 0, num / jnp.maximum(den, 1e-12), g.astype(jnp.float32)).astype(g.dtype)
+
+    def agg_compact(g, pc, mc):
+        wp = weights.reshape(weights.shape + (1,) * (pc.ndim - 1)).astype(jnp.float32)
+        wm = weights.reshape(weights.shape + (1,) * (mc.ndim - 1)).astype(jnp.float32)
+        num = jnp.sum(jnp.where(mc, wp * pc.astype(jnp.float32), 0.0), axis=0)
+        den = jnp.sum(wm * mc.astype(jnp.float32), axis=0)  # compact shape
+        return jnp.where(den > 0, num / jnp.maximum(den, 1e-12), g.astype(jnp.float32)).astype(g.dtype)
+
+    agg = agg_compact if compact else agg_naive
+    lg, treedef = jax.tree.flatten(global_params)
+    lp = treedef.flatten_up_to(trained_stacked)
+    lm = treedef.flatten_up_to(mask_trees)
+    return jax.tree.unflatten(treedef, [agg(g, p, m) for g, p, m in zip(lg, lp, lm)])
+
+
+def fl_round_vmap(flm: FLModel, global_params, locals_stacked, keys, p_ratios, batches, weights, method: str, lr, compact: bool = False):
+    """Cohort-parallel round (clients on the ``data`` mesh axis).
+
+    locals_stacked: client-stacked param tree [C, ...]; keys [C,2]; p_ratios
+    [C]; batches leaves [C, steps, ...]; weights [C].
+    Returns (new_global, new_locals [C,...], train_losses [C]).
+    """
+    trained, unit_masks, losses, fracs = jax.vmap(
+        lambda l, k, p, b: client_round(flm, global_params, l, k, p, b, method, lr)
+    )(locals_stacked, keys, p_ratios, batches)
+    new_global = aggregate(flm, global_params, trained, unit_masks, weights, compact=compact)
+    return new_global, trained, losses, fracs
+
+
+def _compact_mask_shapes(flm: FLModel, global_params):
+    """ShapeDtypeStructs of the normalized (broadcastable) mask tree."""
+    return jax.eval_shape(
+        lambda gp: normalize_mask_tree(
+            gp,
+            flm.expand(
+                gp,
+                M.sample_unit_masks(
+                    jax.random.PRNGKey(0), flm.unit_counts, 0.5, repeats_shapes=flm.repeats_shapes
+                ),
+            ),
+        ),
+        global_params,
+    )
+
+
+def fl_round_scan(flm: FLModel, global_params, locals_stacked, keys, p_ratios, batches, weights, method: str, lr, compact: bool = False):
+    """Sequential-cohort round: clients scanned one at a time so only one
+    client's activations live at once; running masked sums implement the
+    same aggregation. Used when per-client models are FSDP-sharded.
+
+    ``compact=True`` (§Perf): the running denominator lives at the
+    compact mask shape (per freezable unit) instead of a full f32
+    param-shaped tree."""
+
+    num0 = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), global_params)
+    if compact:
+        den0 = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, jnp.float32), _compact_mask_shapes(flm, global_params)
+        )
+    else:
+        den0 = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), global_params)
+
+    def body(carry, xs):
+        num, den = carry
+        local_p, key, p_ratio, b, w = xs
+        trained, unit_masks, loss, frac = client_round(flm, global_params, local_p, key, p_ratio, b, method, lr)
+        mask_tree = normalize_mask_tree(trained, flm.expand(trained, unit_masks))
+        if compact:
+            num = M._tree3(
+                lambda n, t, m: n + jnp.where(m, w * t.astype(jnp.float32), 0.0),
+                num,
+                trained,
+                mask_tree,
+            )
+            den = M._tree2(lambda d, m: d + w * m.astype(jnp.float32), den, mask_tree)
+        else:
+            num = M._tree3(
+                lambda n, t, m: n + w * jnp.broadcast_to(m, t.shape).astype(jnp.float32) * t.astype(jnp.float32),
+                num,
+                trained,
+                mask_tree,
+            )
+            den = M._tree2(
+                lambda d, m: d + w * jnp.broadcast_to(m, d.shape).astype(jnp.float32),
+                den,
+                mask_tree,
+            )
+        return (num, den), (trained, loss, frac)
+
+    (num, den), (new_locals, losses, fracs) = jax.lax.scan(
+        body, (num0, den0), (locals_stacked, keys, p_ratios, batches, weights)
+    )
+    new_global = jax.tree.map(
+        lambda g, n, d: jnp.where(d > 0, n / jnp.maximum(d, 1e-12), g.astype(jnp.float32)).astype(g.dtype),
+        global_params,
+        num,
+        den,
+    )
+    return new_global, new_locals, losses, fracs
+
+
+# ---------------------------------------------------------------------------
+# binders
+# ---------------------------------------------------------------------------
+
+
+def bind_cnn(cfg) -> FLModel:
+    from repro.models import cnn
+
+    unit_counts, expand, importance = cnn.mask_spec(cfg)
+    return FLModel(
+        loss_fn=lambda p, b: cnn.loss_fn(p, cfg, b),
+        unit_counts=unit_counts,
+        repeats_shapes=None,
+        expand=expand,
+        importance=importance,
+    )
+
+
+def bind_transformer(cfg) -> FLModel:
+    from repro.models import model as tmodel
+
+    unit_counts, expand, importance = tmodel.mask_spec(cfg)
+    return FLModel(
+        loss_fn=lambda p, b: tmodel.loss_fn(p, cfg, b),
+        unit_counts=unit_counts,
+        repeats_shapes=tmodel.repeats_shapes(cfg),
+        expand=expand,
+        importance=importance,
+    )

@@ -1,0 +1,145 @@
+"""Unit-mask sampling for FedSPU and the federated-dropout baselines.
+
+A "unit tree" mirrors a model's freezable structure: leaves are int unit
+counts (CNN track: {layer: n_neurons}; transformer track:
+list[stage][pos]{group: n_units} with masks shaped [repeats, n_units]).
+
+Masks are boolean, True = ACTIVE (trained + communicated). FedSPU freezes
+the complement; dropout baselines prune it. Selection is exact-count
+(paper: "random p_k of the neurons are selected"), implemented with a
+rank-vs-k comparison so the active count ``k`` may be a traced scalar
+(needed when vmapping over a cohort with heterogeneous p_k).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def rank_desc(scores):
+    """Dense descending rank along the last axis (0 = largest)."""
+    order = jnp.argsort(-scores, axis=-1, stable=True)
+    idx = jnp.broadcast_to(jnp.arange(scores.shape[-1], dtype=jnp.int32), scores.shape)
+    return jnp.put_along_axis(
+        jnp.zeros(scores.shape, jnp.int32), order, idx, axis=-1, inplace=False
+    )
+
+
+def mask_from_scores(scores, k_active):
+    """Active = k_active largest scores along the last axis (k may be traced)."""
+    r = rank_desc(scores)
+    return r < k_active
+
+
+def active_count(n: int, p) -> Any:
+    """Exact active-unit count for ratio p (traced or static)."""
+    k = jnp.round(jnp.asarray(p, jnp.float32) * n).astype(jnp.int32)
+    return jnp.maximum(k, 1)
+
+
+def _tree_map_counts(fn: Callable, unit_counts):
+    """Map over a unit tree whose leaves are ints, with per-leaf fold keys."""
+    leaves, treedef = jax.tree.flatten(unit_counts)
+    out = [fn(i, n) for i, n in enumerate(leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def _leaf_shape(unit_counts, si_pi_shape):
+    return si_pi_shape
+
+
+def sample_unit_masks(key, unit_counts, p, *, repeats_shapes=None, scores_tree=None, method: str = "random"):
+    """Sample one client's unit masks.
+
+    unit_counts: int-leaf tree. p: active ratio (traced ok).
+    repeats_shapes: optional parallel tree of leading shapes (e.g. (R,))
+      so transformer masks are sampled per scanned repeat.
+    scores_tree: parallel tree of importance scores (for fedmp/hermes/
+      prunefl); required when method == "importance".
+    method: "random" (FedSPU / Random Dropout) | "ordered" (FjORD:
+      leftmost units survive) | "importance" (largest scores survive).
+    """
+    rep_leaves = None
+    if repeats_shapes is not None:
+        rep_leaves, _ = jax.tree.flatten(repeats_shapes, is_leaf=lambda x: isinstance(x, tuple))
+    score_leaves = None
+    if scores_tree is not None:
+        score_leaves, _ = jax.tree.flatten(scores_tree)
+
+    def one(i, n):
+        lead = rep_leaves[i] if rep_leaves is not None else ()
+        shape = tuple(lead) + (n,)
+        k = active_count(n, p)
+        if method == "random":
+            scores = jax.random.uniform(jax.random.fold_in(key, i), shape)
+        elif method == "ordered":
+            scores = jnp.broadcast_to(-jnp.arange(n, dtype=jnp.float32), shape)
+        elif method == "importance":
+            scores = jnp.broadcast_to(score_leaves[i], shape)
+        else:
+            raise ValueError(f"unknown mask method {method!r}")
+        return mask_from_scores(scores, k)
+
+    return _tree_map_counts(one, unit_counts)
+
+
+# ---------------------------------------------------------------------------
+# mask-tree algebra (mask trees come from model.mask_spec / cnn.mask_spec;
+# leaves are bool arrays broadcastable to the param leaf, or python True)
+# ---------------------------------------------------------------------------
+
+
+def merge_active(global_params, local_params, mask_tree):
+    """FedSPU merge (Fig. 8b): active <- global, frozen <- local."""
+    return _tree3(
+        lambda g, l, m: g if m is True else jnp.where(m, g, l),
+        global_params,
+        local_params,
+        mask_tree,
+    )
+
+
+def _tree3(fn, a, b, m):
+    la, treedef = jax.tree.flatten(a)
+    lb = treedef.flatten_up_to(b)
+    lm = treedef.flatten_up_to(m)
+    return jax.tree.unflatten(treedef, [fn(x, y, z) for x, y, z in zip(la, lb, lm)])
+
+
+def _tree2(fn, a, m):
+    la, treedef = jax.tree.flatten(a)
+    lm = treedef.flatten_up_to(m)
+    return jax.tree.unflatten(treedef, [fn(x, z) for x, z in zip(la, lm)])
+
+
+def apply_param_mask(params, mask_tree, fill=0.0):
+    """Zero (prune) inactive parameters (dropout baselines)."""
+    return _tree2(lambda p, m: p if m is True else jnp.where(m, p, fill).astype(p.dtype), params, mask_tree)
+
+
+def mask_grads(grads, mask_tree):
+    """Eq. 5: zero gradients of frozen parameters."""
+    return _tree2(lambda g, m: g if m is True else (g * m.astype(g.dtype)), grads, mask_tree)
+
+
+def mask_fraction(mask_tree, params):
+    """Fraction of parameters active (communication-volume accounting).
+
+    float64-safe for billion-parameter trees (python ints would overflow
+    the weak int32 when traced). Compact masks are summed compactly and
+    scaled by the broadcast factor — never materialized at param shape.
+    """
+    tot = 0.0
+    act = jnp.zeros((), jnp.float32)
+    la, treedef = jax.tree.flatten(params)
+    lm = treedef.flatten_up_to(mask_tree)
+    for p, m in zip(la, lm):
+        tot += float(p.size)
+        if m is True:
+            act += float(p.size)
+        else:
+            bcast = p.size / m.size
+            act += jnp.sum(m.astype(jnp.float32)) * bcast
+    return act / tot

@@ -1,0 +1,179 @@
+"""Federated server driver (paper-faithful track, Algorithm 1/2).
+
+Python-level orchestration (client selection, early-stopping bookkeeping,
+communication accounting) around the jitted round engine in fedspu.py.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig, client_ratio
+from repro.core import early_stopping as es
+from repro.core import fedspu
+from repro.data import synthetic
+
+
+@dataclass
+class RoundRecord:
+    round: int
+    participants: List[int]
+    train_loss: float
+    combined_loss: float
+    comm_gb: float
+    mean_accuracy: Optional[float] = None
+    wall_time_s: float = 0.0
+
+
+@dataclass
+class FLHistory:
+    records: List[RoundRecord] = field(default_factory=list)
+    final_accuracy: float = 0.0
+    rounds_run: int = 0
+    total_comm_gb: float = 0.0
+    total_train_time_s: float = 0.0
+
+
+class FLServer:
+    """Runs FL over synthetic non-iid client datasets.
+
+    model plumbing: ``flm`` (FLModel), ``init_fn(key)->params``,
+    ``eval_fn(params, batch)->accuracy``, batch builders from numpy data.
+    """
+
+    def __init__(
+        self,
+        flm: fedspu.FLModel,
+        init_fn,
+        eval_fn,
+        client_data: List[Dict[str, Dict[str, np.ndarray]]],
+        fl: FLConfig,
+        steps_per_round: int = 10,
+        param_bytes: int = 4,
+    ):
+        self.flm = flm
+        self.fl = fl
+        self.eval_fn = eval_fn
+        self.client_data = client_data
+        self.steps_per_round = steps_per_round
+        self.rng = np.random.default_rng(fl.seed)
+        key = jax.random.PRNGKey(fl.seed)
+        self.global_params = init_fn(key)
+        # every client starts from the broadcast initial model (Alg. 1 l.1)
+        n = fl.n_clients
+        self.local_params = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape).copy(), self.global_params
+        )
+        self.n_params = sum(x.size for x in jax.tree.leaves(self.global_params))
+        self.param_bytes = param_bytes
+        self.es_state = es.ESState.init(n)
+        self.history = FLHistory()
+        self._round_fn = jax.jit(
+            partial(fedspu.fl_round_vmap, self.flm, method=fl.method, lr=fl.lr)
+        )
+        self._loss_fn = jax.jit(self.flm.loss_fn)
+        self._eval_fn = jax.jit(eval_fn)
+
+    # ------------------------------------------------------------------
+    def _select(self) -> np.ndarray:
+        pool = np.where(~self.es_state.stopped)[0] if self.fl.early_stopping else np.arange(self.fl.n_clients)
+        k = min(self.fl.clients_per_round, len(pool))
+        return self.rng.choice(pool, size=k, replace=False)
+
+    def _cohort_batches(self, cohort: np.ndarray):
+        per_client = [
+            synthetic.sample_batches(
+                self.rng, self.client_data[c]["train"], self.steps_per_round, self.fl.batch_size
+            )
+            for c in cohort
+        ]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per_client)
+
+    TEST_N = 128  # fixed eval-batch size: one jit shape for every client
+
+    def _test_batch(self, cid: int):
+        te = self.client_data[cid]["test"]
+        n = len(next(iter(te.values())))
+        rng = np.random.default_rng(10_000 + cid)
+        idx = np.arange(n) if n == self.TEST_N else rng.choice(n, self.TEST_N, replace=n < self.TEST_N)
+        return {k: jnp.asarray(v[idx]) for k, v in te.items()}
+
+    # ------------------------------------------------------------------
+    def run_round(self, t: int) -> bool:
+        """One round; returns False when FL terminated (all stopped)."""
+        if self.fl.early_stopping and self.es_state.all_stopped:
+            return False
+        cohort = self._select()
+        t0 = time.perf_counter()
+        keys = jax.random.split(jax.random.fold_in(jax.random.PRNGKey(self.fl.seed), t), len(cohort))
+        p_ratios = jnp.array([client_ratio(self.fl, int(c)) for c in cohort], jnp.float32)
+        batches = self._cohort_batches(cohort)
+        weights = jnp.array(
+            [len(self.client_data[c]["train"]["y" if "y" in self.client_data[c]["train"] else "labels"]) for c in cohort],
+            jnp.float32,
+        )
+        locals_c = jax.tree.map(lambda x: x[np.asarray(cohort)], self.local_params)
+
+        new_global, new_locals, train_losses, fracs = self._round_fn(
+            self.global_params, locals_c, keys, p_ratios, batches, weights
+        )
+        self.global_params = new_global
+        self.local_params = jax.tree.map(
+            lambda store, upd: store.at[np.asarray(cohort)].set(upd), self.local_params, new_locals
+        )
+        wall = time.perf_counter() - t0
+
+        # Eq. 6 combined losses + ES bookkeeping
+        test_losses = []
+        for i, c in enumerate(cohort):
+            lp = jax.tree.map(lambda x: x[i], new_locals)
+            test_losses.append(float(self._loss_fn(lp, self._test_batch(int(c)))))
+        combined = es.combined_loss(
+            np.asarray(train_losses, np.float64), np.asarray(test_losses, np.float64), self.fl.split_lambda
+        )
+        if self.fl.early_stopping:
+            self.es_state = es.update(self.es_state, cohort, combined)
+
+        comm_gb = float(
+            np.sum(np.asarray(fracs, np.float64)) * self.n_params * self.param_bytes * 2 / 1e9
+        )
+        self.history.records.append(
+            RoundRecord(
+                round=t,
+                participants=[int(c) for c in cohort],
+                train_loss=float(np.mean(np.asarray(train_losses))),
+                combined_loss=float(np.mean(combined)),
+                comm_gb=comm_gb,
+                wall_time_s=wall,
+            )
+        )
+        self.history.total_comm_gb += comm_gb
+        self.history.total_train_time_s += wall
+        self.history.rounds_run = t + 1
+        return True
+
+    # ------------------------------------------------------------------
+    def evaluate(self, max_clients: Optional[int] = None) -> float:
+        """Mean personalized accuracy over clients' own test sets."""
+        n = self.fl.n_clients if max_clients is None else min(max_clients, self.fl.n_clients)
+        accs = []
+        for c in range(n):
+            lp = jax.tree.map(lambda x: x[c], self.local_params)
+            accs.append(float(self._eval_fn(lp, self._test_batch(c))))
+        return float(np.mean(accs))
+
+    def run(self, rounds: Optional[int] = None, eval_every: int = 0) -> FLHistory:
+        rounds = self.fl.max_rounds if rounds is None else rounds
+        for t in range(rounds):
+            if not self.run_round(t):
+                break
+            if eval_every and (t + 1) % eval_every == 0:
+                self.history.records[-1].mean_accuracy = self.evaluate(max_clients=20)
+        self.history.final_accuracy = self.evaluate()
+        return self.history

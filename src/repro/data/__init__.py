@@ -1,0 +1,1 @@
+from repro.data import partition, synthetic  # noqa: F401

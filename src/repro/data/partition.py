@@ -1,0 +1,52 @@
+"""Non-iid client partitioning (paper §5.1): Dirichlet(α) over classes,
+per-client λ train/test split."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+def dirichlet_partition(
+    seed: int, labels: np.ndarray, n_clients: int, alpha: float, min_size: int = 8
+) -> List[np.ndarray]:
+    """Per-class Dirichlet proportions over clients ([5, 31] protocol)."""
+    rng = np.random.default_rng(seed)
+    n_classes = int(labels.max()) + 1
+    while True:
+        idx_per_client: List[List[int]] = [[] for _ in range(n_clients)]
+        for c in range(n_classes):
+            idx_c = np.where(labels == c)[0]
+            rng.shuffle(idx_c)
+            props = rng.dirichlet(np.full(n_clients, alpha))
+            cuts = (np.cumsum(props) * len(idx_c)).astype(int)[:-1]
+            for cid, part in enumerate(np.split(idx_c, cuts)):
+                idx_per_client[cid].extend(part.tolist())
+        sizes = [len(ix) for ix in idx_per_client]
+        if min(sizes) >= min_size:
+            return [np.array(sorted(ix)) for ix in idx_per_client]
+
+
+def split_train_test(
+    seed: int, data: Dict[str, np.ndarray], idx: np.ndarray, lam: float
+) -> Dict[str, Dict[str, np.ndarray]]:
+    """λ train / (1-λ) test split of one client's samples (paper λ=0.7)."""
+    rng = np.random.default_rng(seed)
+    idx = idx.copy()
+    rng.shuffle(idx)
+    cut = max(1, int(len(idx) * lam))
+    tr, te = idx[:cut], idx[cut:] if len(idx) > cut else idx[:1]
+    if len(te) == 0:
+        te = tr[:1]
+    return {
+        "train": {k: v[tr] for k, v in data.items()},
+        "test": {k: v[te] for k, v in data.items()},
+    }
+
+
+def make_federated_dataset(
+    seed: int, data: Dict[str, np.ndarray], n_clients: int, alpha: float, lam: float
+):
+    """Full pipeline: Dirichlet split + per-client train/test."""
+    parts = dirichlet_partition(seed, data["y"], n_clients, alpha)
+    return [split_train_test(seed + i, data, parts[i], lam) for i, _ in enumerate(parts)]

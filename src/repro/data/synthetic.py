@@ -1,0 +1,48 @@
+"""Synthetic datasets (offline container — DESIGN.md §6).
+
+Classification sets mimic EMNIST / CIFAR10 / Google-Speech shapes with
+class-conditional Gaussian images (learnable, non-trivial). LM corpora are
+client-skewed bigram streams for the transformer track.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+def make_classification_data(
+    seed: int, n: int, in_shape: Tuple[int, int, int], n_classes: int, noise: float = 0.6
+) -> Dict[str, np.ndarray]:
+    """Class-prototype + Gaussian-noise images, uniform class marginal."""
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(0, 1, (n_classes,) + in_shape).astype(np.float32)
+    y = rng.integers(0, n_classes, n)
+    x = protos[y] + rng.normal(0, noise, (n,) + in_shape).astype(np.float32)
+    return {"x": x.astype(np.float32), "y": y.astype(np.int32)}
+
+
+def make_lm_corpus(seed: int, n_seqs: int, seq_len: int, vocab: int, skew_id: int = 0):
+    """Client-skewed token streams: a shared bigram backbone plus a
+    client-specific token bias (non-iid across skew ids)."""
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, vocab, (n_seqs, seq_len + 1))
+    # bigram structure: next token correlated with current
+    for t in range(1, seq_len + 1):
+        mask = rng.random(n_seqs) < 0.5
+        base[mask, t] = (base[mask, t - 1] * 31 + 7) % vocab
+    # client skew: a preferred token band
+    band = (skew_id * 97) % vocab
+    mask = rng.random((n_seqs, seq_len + 1)) < 0.3
+    base[mask] = (band + rng.integers(0, max(2, vocab // 20), mask.sum())) % vocab
+    return {
+        "tokens": base[:, :-1].astype(np.int32),
+        "labels": base[:, 1:].astype(np.int32),
+    }
+
+
+def sample_batches(rng: np.random.Generator, data: Dict[str, np.ndarray], steps: int, batch: int):
+    """[steps, batch, ...] minibatches sampled with replacement."""
+    n = len(next(iter(data.values())))
+    idx = rng.integers(0, n, (steps, batch))
+    return {k: v[idx] for k, v in data.items()}

@@ -1,0 +1,9 @@
+# Pallas TPU kernels for FedSPU's compute hot-spots (DESIGN.md §5):
+#   masked_update     — fused frozen-aware SGD step (Eq. 4/5)
+#   masked_matmul     — backprop dW skipping frozen output blocks
+#   masked_aggregate  — Fig. 9 server aggregation
+#   flash_attention   — blocked causal attention (+ sliding window)
+#   ssd_scan          — Mamba-2 chunked SSD scan
+# Each kernel: <name>.py (pl.pallas_call + BlockSpec), oracle in ref.py,
+# jit'd public entry in ops.py (pads, picks pallas/interpret/ref path).
+from repro.kernels import ops, ref  # noqa: F401

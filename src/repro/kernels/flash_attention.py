@@ -1,0 +1,108 @@
+"""Pallas kernel: blocked causal flash attention with optional sliding
+window (GQA-aware). The backbone hot spot for train_4k / prefill_32k.
+
+Grid: (B, H, Sq/BQ, Sk/BK), key axis innermost; online-softmax state
+(running max, sum, output accumulator) lives in VMEM scratch. Causal and
+window structure is exploited at *block* granularity: fully-future blocks
+and blocks entirely outside the window are skipped (no MXU work), which
+for sliding-window layers makes cost O(S·W) instead of O(S²).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BQ, BK = 256, 256
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *, scale, nk, bq, bk, window):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # block-level structure: skip fully-future blocks and (SWA) blocks
+    # entirely older than the window
+    q_min = i * bq
+    q_max = (i + 1) * bq - 1
+    k_min = j * bk
+    k_max = (j + 1) * bk - 1
+    live = k_min <= q_max
+    if window is not None:
+        live &= (q_min - k_max) < window
+
+    @pl.when(live)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32)  # [BQ, hd]
+        k = k_ref[0, 0].astype(jnp.float32)  # [BK, hd]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # [BQ, BK]
+
+        qpos = q_min + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_min + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]  # [BQ, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ()))
+        )
+        acc_ref[...] = corr * acc_ref[...] + pv
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, window: Optional[int] = None, *, interpret: bool = True):
+    """q: [B, H, Sq, hd]; k, v: [B, KV, Sk, hd]; causal self-attention.
+
+    Sq % BQ == 0 and Sk % BK == 0 (ops.flash_attention pads)."""
+    b, h, sq, hd = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    rep = h // kv
+    bq, bk = min(BQ, sq), min(BK, sk)
+    while sq % bq:
+        bq //= 2
+    while sk % bk:
+        bk //= 2
+    scale = 1.0 / math.sqrt(hd)
+    grid = (b, h, sq // bq, sk // bk)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, nk=sk // bk, bq=bq, bk=bk, window=window
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b_, h_, i, j: (b_, h_ // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b_, h_, i, j: (b_, h_ // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,71 @@
+"""Pallas kernel: FedSPU server aggregation (Fig. 9).
+
+``out = Σ_c n_c·m_c⊙w_c / Σ_c n_c·m_c`` with fallback to the previous
+global value where no cohort client held a row active. Bandwidth-bound
+(streams C client copies of every parameter once).
+
+Grid: (M/BM, N/BN, C) with the client axis innermost (sequential
+num/den accumulation in VMEM scratch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BM, BN = 256, 256
+
+
+def _kernel(w_ref, m_ref, wt_ref, g_ref, o_ref, num_ref, den_ref, *, nc: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _():
+        num_ref[...] = jnp.zeros_like(num_ref)
+        den_ref[...] = jnp.zeros_like(den_ref)
+
+    wt = wt_ref[0, 0]  # n_c
+    m = m_ref[0, :, :]  # [BM, 1]
+    contrib = wt * m
+
+    @pl.when(jnp.max(contrib) > 0)
+    def _():
+        num_ref[...] += contrib * w_ref[0].astype(jnp.float32)
+        den_ref[...] += contrib
+
+    @pl.when(c == nc - 1)
+    def _():
+        den = den_ref[...]
+        avg = num_ref[...] / jnp.maximum(den, 1e-12)
+        o_ref[...] = jnp.where(den > 0, avg, g_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def masked_aggregate(w_stack, row_masks, weights, g_old, *, bm: int = 0, bn: int = 0, interpret: bool = True):
+    """w_stack: [C, M, N]; row_masks: [C, M] bool; weights: [C]; g_old: [M, N]."""
+    c, m, n = w_stack.shape
+    bm = bm or min(BM, m)
+    bn = bn or min(BN, n)
+    assert m % bm == 0 and n % bn == 0, (w_stack.shape, bm, bn)
+    masks3d = row_masks.astype(jnp.float32)[:, :, None]  # [C, M, 1]
+    wts2d = weights.astype(jnp.float32)[:, None]  # [C, 1]
+    grid = (m // bm, n // bn, c)
+    return pl.pallas_call(
+        functools.partial(_kernel, nc=c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bn), lambda i, j, k: (k, i, j)),
+            pl.BlockSpec((1, bm, 1), lambda i, j, k: (k, i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), g_old.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w_stack, masks3d, wts2d, g_old)

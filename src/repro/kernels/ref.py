@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references the kernel tests sweep against, and
+also the XLA execution path used by the dry-run lowering (the CPU backend
+cannot lower Pallas TPU kernels natively).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.mamba import ssd_chunked_ref  # noqa: F401  (re-export: SSD oracle)
+
+
+def masked_update_ref(w, g, row_mask, lr: float):
+    """w' = w - lr * (m ⊙ g); mask along the leading (row) axis.
+
+    w, g: [M, N]; row_mask: [M] bool. Frozen rows unchanged (Eq. 4/5).
+    """
+    m = row_mask.astype(jnp.float32)[:, None]
+    return (w.astype(jnp.float32) - lr * m * g.astype(jnp.float32)).astype(w.dtype)
+
+
+def masked_matmul_ref(x, dy, col_block_mask, block: int):
+    """dW = xᵀ·dy with frozen output-column blocks zeroed.
+
+    x: [T, D]; dy: [T, F]; col_block_mask: [F // block] bool — True blocks
+    are computed, False blocks are skipped (their dW is exactly 0).
+    """
+    dw = jnp.einsum("td,tf->df", x.astype(jnp.float32), dy.astype(jnp.float32))
+    m = jnp.repeat(col_block_mask.astype(jnp.float32), block)[None, :]
+    return (dw * m).astype(x.dtype)
+
+
+def masked_aggregate_ref(w_stack, row_masks, weights, g_old):
+    """Fig. 9 server aggregation.
+
+    w_stack: [C, M, N]; row_masks: [C, M] bool; weights: [C] (n_k);
+    g_old: [M, N]. out = Σ_c n_c m_c w_c / Σ_c n_c m_c, falling back to
+    g_old where no client held the row active.
+    """
+    wts = weights.astype(jnp.float32)[:, None, None]
+    m = row_masks.astype(jnp.float32)[:, :, None]
+    num = jnp.sum(wts * m * w_stack.astype(jnp.float32), axis=0)
+    den = jnp.sum(wts * m, axis=0)
+    return jnp.where(den > 0, num / jnp.maximum(den, 1e-12), g_old.astype(jnp.float32)).astype(g_old.dtype)
+
+
+def flash_attention_ref(q, k, v, window: Optional[int] = None, causal: bool = True):
+    """Materialized-scores attention oracle.
+
+    q: [B, H, Sq, hd]; k, v: [B, KV, Sk, hd] (GQA: H % KV == 0).
+    Self-attention positions 0..S-1 (train/prefill semantics).
+    """
+    b, h, sq, hd = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    rep = h // kv
+    kq = jnp.repeat(k, rep, axis=1)
+    vq = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kq.astype(jnp.float32))
+    logits = logits / math.sqrt(hd)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vq.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,2 @@
+# Distribution layer: production meshes, param/input PartitionSpec rules,
+# multi-pod dry-run (lower+compile+roofline terms), train/serve drivers.

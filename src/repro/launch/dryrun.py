@@ -1,0 +1,234 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × input shape) on the
+production meshes and extract the roofline terms (DESIGN.md §7-8).
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+
+The XLA_FLAGS line above MUST run before any other jax-touching import:
+jax locks the device count at first backend init. Smoke tests and benches
+import repro.* directly and see the real single CPU device.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config  # noqa: E402
+from repro.launch import hlo_cost, specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+# TPU v5e hardware constants (assignment §Roofline)
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\b"
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string like 'f32[16,128]{1,0}' or a
+    tuple '(f32[2], bf16[4,4])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in post-SPMD HLO.
+
+    Collectives appear as e.g.:
+      %ag = bf16[...] all-gather(bf16[...] %x), replica_groups=...
+    We take the *output* shape (lhs of '=') as the moved volume — for
+    all-gather/all-to-all this is the full gathered size; for all-reduce
+    and collective-permute output == input.
+    """
+    per_kind: dict = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        kind = m.group(1)
+        # `%name = <shape> <op>(...)` — shape precedes the op name
+        lhs = line.split("=", 1)[1]
+        shape_str = lhs.split(m.group(1))[0]
+        b = _shape_bytes(shape_str)
+        if kind == "all-reduce":
+            b *= 2  # ring all-reduce moves ~2x the buffer
+        per_kind[kind] = per_kind.get(kind, 0) + b
+    per_kind["total"] = sum(per_kind.values())
+    return per_kind
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D  (training) / 2·N_active·D (inference) per step."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False, verbose: bool = True, opt: dict = None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    cfg = get_config(arch)
+    if opt:
+        cfg = cfg.replace(**opt)
+    shp = INPUT_SHAPES[shape_name]
+    t0 = time.perf_counter()
+    built = specs.build_step(cfg, shape_name, mesh)
+    with mesh:
+        jitted = jax.jit(
+            built["fn"],
+            in_shardings=built["in_shardings"],
+            out_shardings=built["out_shardings"],
+        )
+        lowered = jitted.lower(*built["args"])
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+
+    # static HLO walk with while-trip multipliers — XLA's cost_analysis
+    # counts scan bodies once, undercounting deep models (hlo_cost.py)
+    st = hlo_cost.analyze(hlo)
+    flops = st.flops
+    bytes_accessed = st.hbm_bytes
+    coll = dict(st.collective_by_kind)
+    coll["total"] = st.collective_bytes
+    # cost/memory analysis is per-device/partition under SPMD
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll["total"] / ICI_BW
+    mf = model_flops(cfg, shp)
+    result = dict(
+        arch=arch,
+        shape=shape_name,
+        opt=opt or {},
+        mesh="2x16x16" if multi_pod else "16x16",
+        chips=n_chips,
+        kind=built["meta"].get("kind"),
+        layout=built["meta"].get("layout", "-"),
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        bytes_per_device=getattr(mem, "temp_size_in_bytes", 0)
+        + getattr(mem, "argument_size_in_bytes", 0)
+        + getattr(mem, "output_size_in_bytes", 0),
+        arg_bytes=getattr(mem, "argument_size_in_bytes", 0),
+        temp_bytes=getattr(mem, "temp_size_in_bytes", 0),
+        out_bytes=getattr(mem, "output_size_in_bytes", 0),
+        hlo_flops_per_device=flops,
+        hlo_bytes_per_device=bytes_accessed,
+        xla_reported_flops=float(cost.get("flops", 0.0)),  # body-once artifact, kept for reference
+        collective_bytes_per_device=coll["total"],
+        collectives={k: v for k, v in coll.items() if k != "total"},
+        compute_s_term=compute_s,
+        memory_s_term=memory_s,
+        collective_s_term=collective_s,
+        dominant=max(
+            ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+            key=lambda kv: kv[1],
+        )[0],
+        model_flops_global=mf,
+        useful_flops_ratio=(mf / (flops * n_chips)) if flops else 0.0,
+    )
+    if verbose:
+        print(
+            f"[dryrun] {arch:24s} {shape_name:12s} mesh={result['mesh']:8s} "
+            f"layout={result['layout']:5s} lower={t_lower:6.1f}s compile={t_compile:6.1f}s"
+        )
+        print(
+            f"  mem/dev: args={result['arg_bytes']/2**30:8.2f}GiB temp={result['temp_bytes']/2**30:8.2f}GiB"
+        )
+        print(
+            f"  roofline/dev: compute={compute_s*1e3:9.3f}ms memory={memory_s*1e3:9.3f}ms "
+            f"collective={collective_s*1e3:9.3f}ms -> {result['dominant']}-bound"
+        )
+        print(
+            f"  useful-FLOPs ratio (6·N·D / HLO): {result['useful_flops_ratio']:.3f}  "
+            f"collectives: { {k: f'{v/2**30:.2f}GiB' for k, v in result['collectives'].items()} }"
+        )
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="every (arch, shape)")
+    ap.add_argument("--json", default=None, help="append results to this JSONL file")
+    # §Perf optimization flags (default off = paper-faithful baseline)
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--compact-agg", action="store_true")
+    ap.add_argument("--moe-groups", type=int, default=0)
+    ap.add_argument("--attn-chunk", type=int, default=0)
+    ap.add_argument("--head-aligned", action="store_true")
+    args = ap.parse_args(argv)
+    opt = {}
+    if args.remat:
+        opt["remat"] = True
+    if args.compact_agg:
+        opt["compact_agg"] = True
+    if args.moe_groups:
+        opt["moe_groups"] = args.moe_groups
+    if args.attn_chunk:
+        opt["attn_chunk"] = args.attn_chunk
+    if args.head_aligned:
+        opt["head_aligned_tp"] = True
+
+    pairs = (
+        [(a, s) for a in sorted(ARCHS) for s in INPUT_SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    if pairs[0][0] is None:
+        ap.error("--arch/--shape or --all required")
+
+    failures = []
+    for arch, shape in pairs:
+        try:
+            res = dryrun_one(arch, shape, multi_pod=args.multi_pod, opt=opt)
+            if args.json:
+                with open(args.json, "a") as f:
+                    f.write(json.dumps(res) + "\n")
+        except Exception as e:  # noqa: BLE001 — report and continue the sweep
+            failures.append((arch, shape, repr(e)))
+            print(f"[dryrun] FAIL {arch} {shape}: {e}", file=sys.stderr)
+    if failures:
+        print(f"{len(failures)} FAILURES:", failures, file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

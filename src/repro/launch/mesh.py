@@ -1,0 +1,37 @@
+"""Production meshes (DESIGN.md §8).
+
+single-pod: (16, 16)    axes (data, model)       — 256 chips (TPU v5e pod)
+multi-pod : (2, 16, 16) axes (pod, data, model)  — 2 pods = 512 chips
+
+Functions, not module constants: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU smoke)."""
+    auto = (jax.sharding.AxisType.Auto,) * 2
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=auto)
+
+
+def data_axes(mesh) -> tuple:
+    """The client/batch axes of a mesh: ("pod","data") or ("data",)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(mesh, *names) -> int:
+    n = 1
+    for a in names:
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n

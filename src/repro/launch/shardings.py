@@ -1,0 +1,186 @@
+"""Parameter / input / cache PartitionSpec rules (DESIGN.md §8).
+
+Tensor-parallel ("model" axis) rules follow Megatron conventions: shard
+the per-layer *structure* dims (heads·head_dim, d_ff, experts, d_inner),
+never the d_model residual stream. The FL cohort (or serving batch) rides
+the ("pod", "data") axes. ``fsdp=True`` additionally shards the scanned
+repeat dim over "data" (used by the scan-cohort layout of the largest
+archs, where clients are sequential and "data" is free for params).
+
+All rules are name+shape based over ``tree_flatten_with_path`` so they
+apply equally to real param trees and ShapeDtypeStruct trees.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_size, data_axes
+
+
+def _path_names(path) -> list:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return out
+
+
+def _shardable(dim: int, mesh: Mesh, axes) -> bool:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return dim % axis_size(mesh, *axes) == 0
+
+
+def _spec_for_param(names, shape, mesh: Mesh, fsdp: bool, client_axes, leading_unsharded: int = 0, head_dim: int = 0) -> P:
+    """PartitionSpec for one param leaf addressed by its path ``names``.
+
+    ``client_axes``: mesh axes carrying a leading stacked-client dim
+    (vmap-cohort locals), or None. ``leading_unsharded``: number of
+    leading dims to leave replicated (scan-cohort locals).
+    """
+    leaf = names[-1]
+    in_moe = "moe" in names
+    ndim = len(shape)
+    spec = [None] * ndim
+    off = leading_unsharded
+    if client_axes:
+        if _shardable(shape[0], mesh, client_axes):
+            spec[0] = client_axes
+        off = 1
+
+    def put(dim_from_end: int, axes) -> bool:
+        i = ndim - dim_from_end
+        if i >= off and _shardable(shape[i], mesh, axes):
+            spec[i] = axes
+            return True
+        return False
+
+    if leaf == "embed":
+        put(2, "model")  # vocab
+    elif leaf == "lm_head":
+        put(1, "model")  # vocab
+    elif leaf in ("wq", "wk", "wv"):
+        # head-aligned TP only: a shard boundary through the middle of a
+        # head makes GSPMD partial-sum the attention logits (≈S² f32 per
+        # layer — EXPERIMENTS.md §Perf B). A shard must hold whole heads;
+        # replicate otherwise (head_dim=0 disables the check — legacy rule).
+        n = axis_size(mesh, "model")
+        if not head_dim or (shape[-1] % n == 0 and (shape[-1] // n) % head_dim == 0):
+            put(1, "model")
+    elif leaf == "in_proj":
+        put(1, "model")  # zxbcdt columns
+    elif leaf == "wo":
+        n = axis_size(mesh, "model")
+        if not head_dim or (shape[-2] % n == 0 and (shape[-2] // n) % head_dim == 0):
+            put(2, "model")  # heads·hd rows
+    elif leaf in ("w_gate", "w_up"):
+        if in_moe:
+            # expert-parallel; fall back to intra-expert d_ff TP when the
+            # expert count doesn't divide the axis (e.g. granite's 40e)
+            put(3, "model") or put(1, "model")
+        else:
+            put(1, "model")  # d_ff
+    elif leaf == "w_down":
+        if in_moe:
+            put(3, "model") or put(2, "model")
+        else:
+            put(2, "model")  # d_ff rows
+    elif leaf == "out_proj":
+        put(2, "model")  # d_inner rows
+    elif leaf == "conv_w":
+        put(1, "model")  # conv channels
+    # norms / biases / router / A_log / D / dt_bias: replicated
+
+    if fsdp and "stages" in names and ndim - off >= 3:
+        # scanned repeat dim (first dim after any client axis)
+        if spec[off] is None and _shardable(shape[off], mesh, "data"):
+            spec[off] = "data"
+    return P(*spec)
+
+
+def param_shardings(mesh: Mesh, tree, *, fsdp: bool = False, client_axes=None, leading_unsharded: int = 0, head_dim: int = 0):
+    """NamedSharding tree matching ``tree`` (params or SDS of params).
+
+    ``head_dim``: enables head-aligned attention TP (replicate q/k/v/o
+    when a model shard would hold a fraction of a head)."""
+
+    def one(path, leaf):
+        names = _path_names(path)
+        return NamedSharding(
+            mesh,
+            _spec_for_param(names, leaf.shape, mesh, fsdp, client_axes, leading_unsharded, head_dim),
+        )
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# activations / batches / caches
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(mesh: Mesh, tree, *, client_axes=None, batch_axes=None):
+    """Cohort batches [C, steps, b, s] (client_axes on C) or serving
+    batches [B, S] (batch_axes on B)."""
+
+    def one(path, leaf):
+        spec = [None] * len(leaf.shape)
+        if client_axes and _shardable(leaf.shape[0], mesh, client_axes):
+            spec[0] = client_axes
+        elif batch_axes and _shardable(leaf.shape[0], mesh, batch_axes):
+            spec[0] = batch_axes
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def cache_shardings(mesh: Mesh, tree, *, batch_axes, seq_axis: Optional[str] = "model"):
+    """KV / SSM cache shardings.
+
+    Leaves (stacked over repeats R):
+      attn k/v [R, B, cap, kv, hd] — B on batch_axes, cap on ``seq_axis``
+        (sequence-parallel KV: each model shard holds a slice of the
+        context; attention softmax reduces across shards — DESIGN.md §8)
+      attn pos [R, B, cap]         — same
+      mamba conv [R, B, k-1, ch]   — B on batch_axes, ch on "model"
+      mamba ssm [R, B, h, p, n]    — B on batch_axes, h on "model"
+    """
+
+    def one(path, leaf):
+        names = _path_names(path)
+        leafname = names[-1]
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        # dim 0 = repeats; dim 1 = batch
+        if batch_axes and len(shape) >= 2 and _shardable(shape[1], mesh, batch_axes):
+            spec[1] = batch_axes
+        if leafname in ("k", "v") and len(shape) == 5:
+            if seq_axis and _shardable(shape[2], mesh, seq_axis):
+                spec[2] = seq_axis
+        elif leafname == "pos" and len(shape) == 3:
+            if seq_axis and _shardable(shape[2], mesh, seq_axis):
+                spec[2] = seq_axis
+        elif leafname == "conv" and len(shape) == 4:
+            if _shardable(shape[3], mesh, "model"):
+                spec[3] = "model"
+        elif leafname == "ssm" and len(shape) == 5:
+            if _shardable(shape[2], mesh, "model"):
+                spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def cohort_axes(mesh: Mesh) -> tuple:
+    return data_axes(mesh)

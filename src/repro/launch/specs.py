@@ -1,0 +1,233 @@
+"""Step functions + ShapeDtypeStruct input specs for the dry-run and the
+real launchers.
+
+For each (arch, input shape) this module builds:
+  fn             — the jitted-able step (train_step / prefill_step / serve_step)
+  args           — ShapeDtypeStruct stand-ins for every input (no allocation)
+  in_shardings   — NamedSharding tree parallel to args
+  out_shardings  — explicit for params-typed outputs, inferred otherwise
+
+Layouts (DESIGN.md §8): cohort clients ride ("pod","data") in the vmap
+layout; archs whose per-client model is too large for a spatial cohort
+(cohort_size < 16) use the scan layout with FSDP params ("data" shards the
+scanned repeat dim). Decode shards the KV cache *sequence* over "model"
+(sequence-parallel context) and batch over ("pod","data"); long_500k
+(batch=1) spreads the context over both.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, ModelConfig
+from repro.core import fedspu
+from repro.launch import shardings as sh
+from repro.launch.mesh import axis_size, data_axes
+from repro.models import model as tmodel
+
+LOCAL_STEPS = 1  # local minibatches inside the jitted round (dry-run: 1)
+
+
+# ---------------------------------------------------------------------------
+# arch variants per input shape
+# ---------------------------------------------------------------------------
+
+
+def is_pure_full_attention(cfg: ModelConfig) -> bool:
+    has_mamba = any(b.mixer == "mamba" for st in cfg.stages for b in st.pattern)
+    has_window = any(b.window is not None for st in cfg.stages for b in st.pattern)
+    return not has_mamba and not has_window
+
+
+def variant_for_shape(cfg: ModelConfig, shape_name: str) -> ModelConfig:
+    """long_500k on pure full-attention archs selects the sliding-window
+    variant (DESIGN.md §7): a 500k dense KV cache is the memory blocker,
+    so every attention block gets cfg.long_context_window."""
+    if shape_name != "long_500k" or not is_pure_full_attention(cfg):
+        return cfg
+    import dataclasses
+
+    from repro.configs.base import Stage
+
+    new_stages = tuple(
+        Stage(
+            tuple(
+                dataclasses.replace(b, window=cfg.long_context_window)
+                if b.mixer == "attn"
+                else b
+                for b in st.pattern
+            ),
+            st.repeats,
+        )
+        for st in cfg.stages
+    )
+    return cfg.replace(stages=new_stages, name=cfg.name + f"+swa{cfg.long_context_window}")
+
+
+def cohort_layout(cfg: ModelConfig) -> str:
+    """"vmap" (clients spatial on the data axes) or "scan" (sequential,
+    FSDP params) — the latter for archs whose full local model is too
+    large to stack a spatial cohort."""
+    return "scan" if cfg.cohort_size < 16 else "vmap"
+
+
+# ---------------------------------------------------------------------------
+# SDS helpers
+# ---------------------------------------------------------------------------
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def params_sds(cfg: ModelConfig):
+    return jax.eval_shape(lambda: tmodel.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def caches_sds(cfg: ModelConfig, batch: int, seq_len: int):
+    return jax.eval_shape(lambda: tmodel.make_caches(cfg, batch, seq_len))
+
+
+def stack_sds(tree, n: int):
+    return jax.tree.map(lambda x: sds((n,) + tuple(x.shape), x.dtype), tree)
+
+
+def token_batch_sds(cfg: ModelConfig, batch: int, seq: int, *, labels: bool):
+    if cfg.input_mode == "embeddings":
+        b = {"embeddings": sds((batch, seq, cfg.d_model), cfg.dtype)}
+    else:
+        b = {"tokens": sds((batch, seq), jnp.int32)}
+    if labels:
+        b["labels"] = sds((batch, seq), jnp.int32)
+    return b
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def build_train(cfg: ModelConfig, mesh, global_batch: int, seq: int, method: str = "fedspu", lr: float = 1e-2) -> Dict[str, Any]:
+    """FedSPU round step at pod scale: the paper's Algorithm 1 line 5-15
+    as ONE SPMD program."""
+    layout = cohort_layout(cfg)
+    caxes = data_axes(mesh)
+    c = cfg.cohort_size
+    if layout == "vmap":
+        c = axis_size(mesh, *caxes)  # one client per data(-pod) slice
+    per_client = max(1, global_batch // c)
+    flm = fedspu.bind_transformer(cfg)
+    round_fn = fedspu.fl_round_vmap if layout == "vmap" else fedspu.fl_round_scan
+
+    def train_step(global_params, locals_stacked, keys, p_ratios, batches, weights):
+        return round_fn(
+            flm, global_params, locals_stacked, keys, p_ratios, batches, weights,
+            method, lr, compact=cfg.compact_agg,
+        )
+
+    gp = params_sds(cfg)
+    locals_ = stack_sds(gp, c)
+    keys = sds((c, 2), jnp.uint32)
+    p_ratios = sds((c,), jnp.float32)
+    batch_one = token_batch_sds(cfg, per_client, seq, labels=True)
+    batches = jax.tree.map(lambda x: sds((c, LOCAL_STEPS) + tuple(x.shape), x.dtype), batch_one)
+    weights = sds((c,), jnp.float32)
+
+    fsdp = layout == "scan"
+    hd = cfg.head_dim if cfg.head_aligned_tp else 0
+    g_shard = sh.param_shardings(mesh, gp, fsdp=fsdp, head_dim=hd)
+    if layout == "vmap":
+        l_shard = sh.param_shardings(mesh, locals_, client_axes=caxes, head_dim=hd)
+        b_shard = jax.tree.map(
+            lambda x: NamedSharding(mesh, P(caxes, *([None] * (len(x.shape) - 1)))), batches
+        )
+    else:
+        l_shard = sh.param_shardings(mesh, locals_, fsdp=True, leading_unsharded=1, head_dim=hd)
+        b_shard = jax.tree.map(
+            lambda x: NamedSharding(
+                mesh, P(None, None, caxes, *([None] * (len(x.shape) - 3)))
+            ),
+            batches,
+        )
+    rep = lambda t: sh.replicated(mesh, t)
+    return dict(
+        fn=train_step,
+        args=(gp, locals_, keys, p_ratios, batches, weights),
+        in_shardings=(g_shard, l_shard, rep(keys), rep(p_ratios), b_shard, rep(weights)),
+        out_shardings=(g_shard, l_shard, None, None),
+        meta=dict(kind="train", layout=layout, cohort=c, per_client_batch=per_client, seq=seq),
+    )
+
+
+def build_prefill(cfg: ModelConfig, mesh, batch: int, seq: int) -> Dict[str, Any]:
+    baxes = data_axes(mesh)
+
+    def prefill_step(params, batch_in):
+        return tmodel.prefill(params, cfg, batch_in)
+
+    gp = params_sds(cfg)
+    b = token_batch_sds(cfg, batch, seq, labels=False)
+    g_shard = sh.param_shardings(mesh, gp, head_dim=cfg.head_dim if cfg.head_aligned_tp else 0)
+    b_shard = sh.batch_shardings(mesh, b, batch_axes=baxes)
+    return dict(
+        fn=prefill_step,
+        args=(gp, b),
+        in_shardings=(g_shard, b_shard),
+        out_shardings=None,
+        meta=dict(kind="prefill", batch=batch, seq=seq),
+    )
+
+
+def build_decode(cfg: ModelConfig, mesh, batch: int, seq: int) -> Dict[str, Any]:
+    """serve_step: ONE new token against a KV/SSM cache of ``seq``."""
+    baxes = data_axes(mesh)
+    seq_axis: Any = "model"
+    if batch == 1:
+        seq_axis = baxes + ("model",)  # long_500k: context over every axis
+        baxes = ()  # a size-1 batch can't also ride the data axes
+
+    def serve_step(params, caches, tokens, pos):
+        return tmodel.decode_step(params, cfg, caches, tokens, pos)
+
+    gp = params_sds(cfg)
+    caches = caches_sds(cfg, batch, seq)
+    if cfg.input_mode == "embeddings":
+        tokens = sds((batch, 1, cfg.d_model), cfg.dtype)
+    else:
+        tokens = sds((batch, 1), jnp.int32)
+    pos = sds((batch,), jnp.int32)
+    g_shard = sh.param_shardings(mesh, gp, head_dim=cfg.head_dim if cfg.head_aligned_tp else 0)
+    c_shard = sh.cache_shardings(mesh, caches, batch_axes=baxes, seq_axis=seq_axis)
+    shard_b = bool(baxes) and batch % axis_size(mesh, *baxes) == 0
+    t_spec = P(baxes, *([None] * (len(tokens.shape) - 1))) if shard_b else P()
+    return dict(
+        fn=serve_step,
+        args=(gp, caches, tokens, pos),
+        in_shardings=(
+            g_shard,
+            c_shard,
+            NamedSharding(mesh, t_spec),
+            NamedSharding(mesh, P(baxes) if shard_b else P()),
+        ),
+        out_shardings=None,
+        meta=dict(kind="decode", batch=batch, seq=seq),
+    )
+
+
+def build_step(cfg: ModelConfig, shape_name: str, mesh, **kw) -> Dict[str, Any]:
+    shp = INPUT_SHAPES[shape_name]
+    cfg = variant_for_shape(cfg, shape_name)
+    if shp.kind == "train":
+        return build_train(cfg, mesh, shp.global_batch, shp.seq_len, **kw)
+    if shp.kind == "prefill":
+        return build_prefill(cfg, mesh, shp.global_batch, shp.seq_len)
+    return build_decode(cfg, mesh, shp.global_batch, shp.seq_len)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh):
+    """Public: the ShapeDtypeStruct stand-ins for every model input."""
+    return build_step(cfg, shape_name, mesh)["args"]

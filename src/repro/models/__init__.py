@@ -1,0 +1,1 @@
+from repro.models import cnn, layers, mamba, model, moe  # noqa: F401

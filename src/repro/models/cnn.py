@@ -1,0 +1,165 @@
+"""Paper-faithful CNN track (EMNIST / CIFAR10 / Google-Speech models).
+
+EMNIST & Speech: 2 conv + 1 FC head  (FjORD setting [17]).
+CIFAR10:         2 conv + 3 FC       (Hermes setting [27]).
+
+Unlike the transformer track (block/head/expert freezing — DESIGN.md §3),
+the CNN track keeps the paper's *neuron-granular* masks: conv output
+channels and FC hidden units are the "neurons"; a weight is active iff both
+endpoint neurons are active (outer-product masks, Lemma 1's p_k² rule).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    in_shape: Tuple[int, int, int]  # H, W, C
+    n_classes: int
+    conv_channels: Tuple[int, ...] = (32, 64)
+    fc_hidden: Tuple[int, ...] = ()  # hidden FC layers (output head excluded)
+    kernel: int = 5
+    dtype: str = "float32"
+
+
+EMNIST_CNN = CNNConfig("emnist_cnn", (28, 28, 1), 62, (32, 64), (), 5)
+CIFAR_CNN = CNNConfig("cifar_cnn", (32, 32, 3), 10, (32, 64), (384, 192), 5)
+SPEECH_CNN = CNNConfig("speech_cnn", (32, 32, 1), 35, (32, 64), (), 5)
+
+PAPER_CNNS = {c.name: c for c in (EMNIST_CNN, CIFAR_CNN, SPEECH_CNN)}
+
+
+def _flat_dim(cfg: CNNConfig) -> Tuple[int, int]:
+    h, w, _ = cfg.in_shape
+    for _ in cfg.conv_channels:
+        h, w = h // 2, w // 2
+    return h * w, cfg.conv_channels[-1]
+
+
+def init_params(cfg: CNNConfig, key) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    params: Dict = {}
+    cin = cfg.in_shape[2]
+    keys = jax.random.split(key, len(cfg.conv_channels) + len(cfg.fc_hidden) + 1)
+    ki = 0
+    for i, cout in enumerate(cfg.conv_channels):
+        fan = cfg.kernel * cfg.kernel * cin
+        params[f"conv{i}"] = {
+            "w": (jax.random.normal(keys[ki], (cfg.kernel, cfg.kernel, cin, cout)) / math.sqrt(fan)).astype(dt),
+            "b": jnp.zeros((cout,), dt),
+        }
+        cin = cout
+        ki += 1
+    spatial, chan = _flat_dim(cfg)
+    din = spatial * chan
+    dims = list(cfg.fc_hidden) + [cfg.n_classes]
+    for i, dout in enumerate(dims):
+        params[f"fc{i}"] = {
+            "w": (jax.random.normal(keys[ki], (din, dout)) / math.sqrt(din)).astype(dt),
+            "b": jnp.zeros((dout,), dt),
+        }
+        din = dout
+        ki += 1
+    return params
+
+
+def forward(params: Dict, cfg: CNNConfig, x):
+    """x: [B, H, W, C] -> logits [B, n_classes]."""
+    for i in range(len(cfg.conv_channels)):
+        p = params[f"conv{i}"]
+        x = jax.lax.conv_general_dilated(
+            x, p["w"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        ) + p["b"]
+        x = jax.nn.relu(x)
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+    x = x.reshape(x.shape[0], -1)
+    n_fc = len(cfg.fc_hidden) + 1
+    for i in range(n_fc):
+        p = params[f"fc{i}"]
+        x = x @ p["w"] + p["b"]
+        if i < n_fc - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def loss_fn(params: Dict, cfg: CNNConfig, batch: Dict):
+    logits = forward(params, cfg, batch["x"]).astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+    return (logz - gold).mean()
+
+
+def accuracy(params: Dict, cfg: CNNConfig, batch: Dict):
+    logits = forward(params, cfg, batch["x"])
+    return (jnp.argmax(logits, -1) == batch["y"]).mean()
+
+
+# ---------------------------------------------------------------------------
+# FedSPU neuron masks (paper-faithful granularity)
+# ---------------------------------------------------------------------------
+
+
+def mask_spec(cfg: CNNConfig):
+    """Returns (unit_counts, expand_fn) like models.model.mask_spec.
+
+    unit_counts: {layer_name: n_neurons} — compact masks are 1-D bool.
+    expand_fn(params, unit_masks) -> "is-active" tree (Lemma 1 outer rule).
+    """
+    unit_counts: Dict[str, int] = {}
+    for i, cout in enumerate(cfg.conv_channels):
+        unit_counts[f"conv{i}"] = cout
+    for i, dout in enumerate(cfg.fc_hidden):
+        unit_counts[f"fc{i}"] = dout
+
+    spatial, _ = _flat_dim(cfg)
+
+    def expand(params: Dict, unit_masks: Dict):
+        out: Dict = {}
+        prev = None  # mask of the previous layer's outputs (None = input, all active)
+        for i in range(len(cfg.conv_channels)):
+            m = unit_masks[f"conv{i}"]
+            wmask = m[None, None, None, :]
+            if prev is not None:
+                wmask = wmask & prev[None, None, :, None]
+            out[f"conv{i}"] = {"w": wmask, "b": m}
+            prev = m
+        # conv output flattens as (H, W, C): per-feature mask tiles channels
+        prev = jnp.tile(prev, spatial)
+        n_fc = len(cfg.fc_hidden) + 1
+        for i in range(n_fc):
+            if i < n_fc - 1:
+                m = unit_masks[f"fc{i}"]
+                out[f"fc{i}"] = {"w": prev[:, None] & m[None, :], "b": m}
+                prev = m
+            else:  # output head: outputs always active
+                out[f"fc{i}"] = {"w": prev[:, None], "b": True}
+        return out
+
+    def unit_importance(tree: Dict, ord: int = 2):
+        """Per-neuron importance (FedMP l1 / Hermes l2 on params;
+        PruneFL l2 on grads — pass the grad tree)."""
+        s: Dict = {}
+        for i in range(len(cfg.conv_channels)):
+            w, b = tree[f"conv{i}"]["w"], tree[f"conv{i}"]["b"]
+            s[f"conv{i}"] = (
+                jnp.sum(jnp.abs(w.astype(jnp.float32)) ** ord, axis=(0, 1, 2))
+                + jnp.abs(b.astype(jnp.float32)) ** ord
+            )
+        for i in range(len(cfg.fc_hidden)):
+            w, b = tree[f"fc{i}"]["w"], tree[f"fc{i}"]["b"]
+            s[f"fc{i}"] = (
+                jnp.sum(jnp.abs(w.astype(jnp.float32)) ** ord, axis=0)
+                + jnp.abs(b.astype(jnp.float32)) ** ord
+            )
+        return s
+
+    return unit_counts, expand, unit_importance

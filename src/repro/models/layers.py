@@ -1,0 +1,224 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA attention (full / sliding
+window / cached decode), SwiGLU MLP.
+
+All functions are pure; parameters are plain dict pytrees created by the
+``init_*`` helpers. Shapes use [B, S, ...] batch-major layout.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockSpec, ModelConfig
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_attn(key, cfg: ModelConfig, dtype) -> dict:
+    d, qd = cfg.d_model, cfg.n_heads * cfg.head_dim
+    kvd = cfg.n_kv_heads * cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "norm": jnp.ones((d,), dtype),
+        "wq": _dense_init(ks[0], (d, qd), dtype),
+        "wk": _dense_init(ks[1], (d, kvd), dtype),
+        "wv": _dense_init(ks[2], (d, kvd), dtype),
+        "wo": _dense_init(ks[3], (qd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), dtype)
+        p["bk"] = jnp.zeros((kvd,), dtype)
+        p["bv"] = jnp.zeros((kvd,), dtype)
+    return p
+
+
+def init_mlp(key, cfg: ModelConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "w_gate": _dense_init(ks[0], (d, f), dtype),
+        "w_up": _dense_init(ks[1], (d, f), dtype),
+        "w_down": _dense_init(ks[2], (f, d), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# norm / rope
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [B, S, H, hd]; positions: [B, S] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, hd/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, window: Optional[int], chunk: int = 1024):
+    """Chunked causal attention.
+
+    q: [B, Sq, H, hd]; k/v: [B, Sk, KV, hd]; *_pos int32 ([B,Sq]/[B,Sk]).
+    Scans over query chunks so the [Sq, Sk] score matrix never fully
+    materializes (XLA-native stand-in for the Pallas flash kernel).
+    Key positions < 0 mark empty cache slots.
+    """
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    scale = 1.0 / math.sqrt(hd)
+
+    kT = jnp.swapaxes(k, 1, 2)  # [B, KV, Sk, hd]
+    vT = jnp.swapaxes(v, 1, 2)
+
+    def one_chunk(qc, qpc):
+        # qc: [B, C, H, hd] -> [B, KV, rep, C, hd]
+        c = qc.shape[1]
+        qh = jnp.swapaxes(qc, 1, 2).reshape(b, kv, rep, c, hd)
+        logits = jnp.einsum(
+            "bkrch,bksh->bkrcs", qh, kT, preferred_element_type=jnp.float32
+        ) * scale
+        mask = (k_pos[:, None, None, None, :] <= qpc[:, None, None, :, None]) & (
+            k_pos[:, None, None, None, :] >= 0
+        )
+        if window is not None:
+            mask &= (qpc[:, None, None, :, None] - k_pos[:, None, None, None, :]) < window
+        logits = jnp.where(mask, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkrcs,bksh->bkrch", probs, vT)
+        return jnp.swapaxes(out.reshape(b, kv * rep, c, hd), 1, 2)
+
+    if sq <= chunk:
+        return one_chunk(q, q_pos)
+
+    n_chunks = sq // chunk
+    assert sq % chunk == 0, f"seq {sq} not divisible by chunk {chunk}"
+    qs = q.reshape(b, n_chunks, chunk, h, hd)
+    ps = q_pos.reshape(b, n_chunks, chunk)
+
+    def body(_, xs):
+        qc, pc = xs
+        return None, one_chunk(qc, pc)
+
+    _, outs = jax.lax.scan(body, None, (jnp.swapaxes(qs, 0, 1), jnp.swapaxes(ps, 0, 1)))
+    # outs: [n_chunks, B, chunk, H, hd]
+    return jnp.swapaxes(outs, 0, 1).reshape(b, sq, h, hd)
+
+
+def attn_apply(
+    params: dict,
+    x,
+    cfg: ModelConfig,
+    spec: BlockSpec,
+    positions,
+    cache: Optional[dict] = None,
+):
+    """Attention mixer. Returns (out, new_cache).
+
+    Training/prefill: cache is None -> self-attention over the sequence;
+    a fresh cache dict is returned (for prefill) holding roped keys.
+    Decode: cache = {"k","v","pos"} ring/linear buffer; x is [B, 1, d].
+    """
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    y = rmsnorm(x, params["norm"], cfg.norm_eps)
+    q = y @ params["wq"]
+    k = y @ params["wk"]
+    v = y @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kvh, hd)
+    v = v.reshape(b, s, kvh, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        out = _sdpa_chunked(q, k, v, positions, positions, spec.window, chunk=cfg.attn_chunk)
+        new_cache = {"k": k, "v": v, "pos": positions}
+    else:
+        # decode: write the new token into the cache (ring buffer if SWA)
+        cap = cache["k"].shape[1]
+        pos0 = positions[:, 0]  # [B]
+        slot = pos0 % cap  # ring for SWA; == pos for full cache
+        ck = _write_slot(cache["k"], k, slot)
+        cv = _write_slot(cache["v"], v, slot)
+        cpos = _write_pos(cache["pos"], pos0, slot)
+        win = spec.window if spec.window is not None else None
+        out = _sdpa_chunked(q, ck, cv, positions, cpos, win)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+
+    out = out.reshape(b, s, h * hd) @ params["wo"]
+    return x + out, new_cache
+
+
+def _write_slot(buf, new, slot):
+    """buf: [B, L, ...]; new: [B, 1, ...]; slot: [B] int32."""
+
+    def upd(b_buf, b_new, s):
+        return jax.lax.dynamic_update_slice_in_dim(b_buf, b_new.astype(b_buf.dtype), s, axis=0)
+
+    return jax.vmap(upd)(buf, new, slot)
+
+
+def _write_pos(pos_buf, new_pos, slot):
+    """pos_buf: [B, L] int32; new_pos, slot: [B]."""
+    lpos = jnp.arange(pos_buf.shape[1], dtype=jnp.int32)[None, :]
+    hit = lpos == slot[:, None]
+    return jnp.where(hit, new_pos[:, None], pos_buf)
+
+
+def make_attn_cache(cfg: ModelConfig, spec: BlockSpec, batch: int, seq_len: int, dtype):
+    """Empty cache sized for a decode run with context length ``seq_len``."""
+    cap = min(spec.window, seq_len) if spec.window is not None else seq_len
+    return {
+        "k": jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.full((batch, cap), -1, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_apply(params: dict, x, cfg: ModelConfig):
+    y = rmsnorm(x, params["norm"], cfg.norm_eps)
+    gate = jax.nn.silu(y @ params["w_gate"])
+    up = y @ params["w_up"]
+    return x + (gate * up) @ params["w_down"]

@@ -1,0 +1,190 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Chunked SSD forward for train/prefill (linear in sequence length, O(1)
+HLO via lax.scan over chunks) and an O(1)-state single-token decode step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init, rmsnorm
+
+CHUNK = 128
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    din, nh = cfg.d_inner, cfg.ssm_nheads
+    ks = jax.random.split(key, 3)
+    zxbcdt = 2 * din + 2 * cfg.ssm_ngroups * cfg.ssm_state + nh
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "in_proj": _dense_init(ks[0], (d, zxbcdt), dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, cfg.conv_dim)) * 0.1).astype(dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gnorm": jnp.ones((din,), dtype),
+        "out_proj": _dense_init(ks[2], (din, d), dtype),
+    }
+
+
+def _segsum(a):
+    """a: [..., L] -> [..., L, L] lower-triangular segment sums."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    ss = cs[..., :, None] - cs[..., None, :]  # [..., i, j] = sum(j+1..i)
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def ssd_chunked_ref(x, dt, A, B, C, init_state=None, chunk: int = CHUNK):
+    """Chunked SSD scan (pure jnp oracle; mirrored by kernels/ssd_scan).
+
+    x: [b, l, h, p]; dt: [b, l, h]; A: [h] (negative);
+    B, C: [b, l, g, n]. Returns (y [b,l,h,p], final_state [b,h,p,n]).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    chunk = min(chunk, l)
+    assert l % chunk == 0, f"seq {l} % chunk {chunk} != 0"
+    c = l // chunk
+    rep = h // g
+
+    xc = x.reshape(b, c, chunk, h, p)
+    dtc = dt.reshape(b, c, chunk, h)
+    Bc = B.reshape(b, c, chunk, g, n)
+    Cc = C.reshape(b, c, chunk, g, n)
+    Bh = jnp.repeat(Bc, rep, axis=3)  # [b,c,L,h,n]
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]  # [b,c,L,h]
+    dAh = jnp.moveaxis(dA, -1, -2)  # [b,c,h,L]
+    A_cum = jnp.cumsum(dAh, axis=-1)  # [b,c,h,L]
+
+    # intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(dAh))  # [b,c,h,L,L]
+    xdt = xc * dtc[..., None]  # [b,c,L,h,p]
+    y_diag = jnp.einsum("bclhn,bcshn,bchls,bcshp->bclhp", Ch, Bh, Lmat, xdt)
+
+    # chunk-final states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)  # [b,c,h,L]
+    states = jnp.einsum("bclhn,bchl,bclhp->bchpn", Bh, decay_states, xdt)
+
+    chunk_decay = jnp.exp(A_cum[..., -1])  # [b,c,h]
+    state_decay_in = jnp.exp(A_cum)  # [b,c,h,L]
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def body(carry, inp):
+        st, cdecay, Ck, sdecay = inp  # per-chunk
+        y_off = jnp.einsum("blhn,bhpn,bhl->blhp", Ck, carry, sdecay)
+        new_carry = carry * cdecay[..., None, None] + st
+        return new_carry, y_off
+
+    xs = (
+        jnp.moveaxis(states.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(chunk_decay, 1, 0),
+        jnp.moveaxis(Ch.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(state_decay_in, 1, 0),
+    )
+    final_state, y_off = jax.lax.scan(body, init_state.astype(jnp.float32), xs)
+    y_off = jnp.moveaxis(y_off, 0, 1)  # [b,c,L,h,p]
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(b, l, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state, x, dt, A, B, C):
+    """One-token recurrence. state: [b,h,p,n]; x: [b,h,p]; dt: [b,h];
+    B, C: [b,g,n]. Returns (y [b,h,p], new_state)."""
+    g = B.shape[1]
+    h = x.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=1).astype(jnp.float32)  # [b,h,n]
+    Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    dA = jnp.exp(dt * A[None, :])  # [b,h]
+    upd = jnp.einsum("bhp,bhn->bhpn", (x * dt[..., None]).astype(jnp.float32), Bh)
+    new_state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x.dtype), new_state
+
+
+def _causal_conv(xbc, w):
+    """Depthwise causal conv. xbc: [b, l, ch]; w: [k, ch]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad.astype(jnp.float32),
+        w.astype(jnp.float32)[:, None, :],  # [k, 1, ch]
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=w.shape[1],
+    )
+    return out.astype(xbc.dtype)
+
+
+def mamba_apply(params: dict, x, cfg: ModelConfig, cache=None):
+    """Mamba-2 block. x: [B, S, d]. Returns (out, new_cache).
+
+    cache = {"conv": [B, d_conv-1, conv_dim], "ssm": [B, h, p, n]} for decode.
+    """
+    b, s, d = x.shape
+    din, nh, p = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_headdim
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    y = rmsnorm(x, params["norm"], cfg.norm_eps)
+    zxbcdt = y @ params["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [din, din + cfg.conv_dim], axis=-1)
+    A = -jnp.exp(params["A_log"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [b,s,nh]
+
+    if cache is None:
+        xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"]))
+        xs, B_, C_ = jnp.split(xbc, [din, din + g * n], axis=-1)
+        xh = xs.reshape(b, s, nh, p)
+        Bm = B_.reshape(b, s, g, n)
+        Cm = C_.reshape(b, s, g, n)
+        yssd, final_state = ssd_chunked_ref(xh, dt, A, Bm, Cm)
+        yssd = yssd + xh * params["D"][None, None, :, None]
+        new_cache = {
+            "conv": xbc_tail(zxbcdt, cfg, din),
+            "ssm": final_state,
+        }
+    else:
+        # single-token decode
+        conv_state = cache["conv"]  # [b, k-1, ch]
+        xbc_t = xbc[:, 0]  # [b, ch]
+        window = jnp.concatenate([conv_state, xbc_t[:, None]], axis=1)  # [b,k,ch]
+        conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), params["conv_w"].astype(jnp.float32))
+        xbc_t = jax.nn.silu(conv_out).astype(x.dtype)
+        xs, B_, C_ = jnp.split(xbc_t, [din, din + g * n], axis=-1)
+        xh = xs.reshape(b, nh, p)
+        Bm = B_.reshape(b, g, n)
+        Cm = C_.reshape(b, g, n)
+        yt, new_ssm = ssd_decode_step(cache["ssm"], xh, dt[:, 0], A, Bm, Cm)
+        yt = yt + xh * params["D"][None, :, None]
+        yssd = yt[:, None]  # [b,1,nh,p]
+        new_cache = {"conv": window[:, 1:], "ssm": new_ssm}
+
+    # D / dt live in f32; cast back so the residual stream keeps the
+    # model dtype (bf16) — scan carries require a stable dtype.
+    yf = yssd.reshape(b, s, din).astype(x.dtype)
+    yf = rmsnorm(yf * jax.nn.silu(z.astype(jnp.float32)).astype(yf.dtype), params["gnorm"], cfg.norm_eps)
+    out = yf @ params["out_proj"]
+    return x + out, new_cache
+
+
+def xbc_tail(zxbcdt, cfg: ModelConfig, din: int):
+    """Last d_conv-1 pre-conv xBC values (prefill -> decode cache handoff)."""
+    xbc = zxbcdt[:, :, din : din + cfg.conv_dim]
+    return xbc[:, -(cfg.d_conv - 1) :, :]
+
+
+def make_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,360 @@
+"""Stage/pattern decoder-LM engine.
+
+A model = token (or stub-frontend embedding) input -> sequence of stages,
+each stage scanning a short heterogeneous block pattern with stacked
+parameters -> final RMSNorm -> (tied) LM head.
+
+Exports:
+  init_params(cfg, key)         -> param pytree
+  forward(params, cfg, batch)   -> logits           (train)
+  prefill(params, cfg, batch)   -> (logits, caches) (cache build)
+  decode_step(params, cfg, caches, tokens, pos) -> (logits, caches)
+  loss_fn(params, cfg, batch)   -> scalar loss
+  mask_spec(cfg)                -> FedSPU unit-mask structure (core/masks.py)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockSpec, ModelConfig, Stage
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import layers as layers_mod
+from repro.models.layers import attn_apply, init_attn, init_mlp, mlp_apply, rmsnorm
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig, bs: BlockSpec) -> Params:
+    dt = _dtype(cfg)
+    p: Params = {}
+    k1, k2 = jax.random.split(key)
+    if bs.mixer == "attn":
+        p["attn"] = init_attn(k1, cfg, dt)
+    elif bs.mixer == "mamba":
+        p["mamba"] = mamba_mod.init_mamba(k1, cfg, dt)
+    if bs.ffn == "mlp":
+        p["mlp"] = init_mlp(k2, cfg, dt)
+    elif bs.ffn == "moe":
+        p["moe"] = moe_mod.init_moe(k2, cfg, dt)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, len(cfg.stages) + 2)
+    params: Params = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "stages": [],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[1], (cfg.d_model, cfg.vocab_size)) * 0.02
+        ).astype(dt)
+    for si, stage in enumerate(cfg.stages):
+        sk = jax.random.split(keys[si + 2], stage.repeats * len(stage.pattern))
+        sk = sk.reshape(stage.repeats, len(stage.pattern), 2)
+        pos_params = []
+        for pi, bs in enumerate(stage.pattern):
+            reps = [_init_block(sk[r, pi], cfg, bs) for r in range(stage.repeats)]
+            pos_params.append(jax.tree.map(lambda *xs: jnp.stack(xs), *reps))
+        params["stages"].append(pos_params)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward helpers
+# ---------------------------------------------------------------------------
+
+
+def _block_apply(bparams: Params, x, cfg: ModelConfig, bs: BlockSpec, positions, cache):
+    new_cache = {}
+    if bs.mixer == "attn":
+        x, c = attn_apply(bparams["attn"], x, cfg, bs, positions, cache.get("attn") if cache else None)
+        new_cache["attn"] = c
+    elif bs.mixer == "mamba":
+        x, c = mamba_mod.mamba_apply(bparams["mamba"], x, cfg, cache.get("mamba") if cache else None)
+        new_cache["mamba"] = c
+    if bs.ffn == "mlp":
+        x = mlp_apply(bparams["mlp"], x, cfg)
+    elif bs.ffn == "moe":
+        x = moe_mod.moe_apply(bparams["moe"], x, cfg)
+    return x, new_cache
+
+
+def _run_stages(params: Params, cfg: ModelConfig, x, positions, caches: Optional[list], collect: bool):
+    """caches: None (train) or list[stage][pos] of stacked cache trees.
+
+    Returns (x, new_caches) where new_caches mirrors the input structure
+    (collect=True also builds caches from scratch during prefill).
+    """
+    out_caches = []
+    for si, stage in enumerate(cfg.stages):
+        stage_params = params["stages"][si]
+        stage_caches_in = caches[si] if caches is not None else None
+
+        def body(carry, xs):
+            h = carry
+            rep_params, rep_caches = xs
+            new_rep_caches = []
+            for pi, bs in enumerate(stage.pattern):
+                c_in = rep_caches[pi] if rep_caches is not None else None
+                h, c_out = _block_apply(rep_params[pi], h, cfg, bs, positions, c_in)
+                new_rep_caches.append(c_out)
+            return h, tuple(new_rep_caches) if (collect or rep_caches is not None) else None
+
+        # §Perf: activation checkpointing — recompute each scanned block's
+        # activations in backward instead of saving them (training only)
+        if cfg.remat and caches is None and not collect:
+            body = jax.checkpoint(body)
+
+        xs_caches = tuple(stage_caches_in) if stage_caches_in is not None else None
+        if xs_caches is not None or collect:
+            x, ys = jax.lax.scan(body, x, (tuple(stage_params), xs_caches))
+            out_caches.append(list(ys) if ys is not None else None)
+        else:
+            x, _ = jax.lax.scan(body, x, (tuple(stage_params), None))
+            out_caches.append(None)
+    return x, out_caches
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, Any]):
+    if cfg.input_mode == "embeddings":
+        x = batch["embeddings"].astype(_dtype(cfg))
+    else:
+        x = params["embed"][batch["tokens"]]
+    b, s = x.shape[0], x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    return x, positions
+
+
+def _lm_head(params: Params, cfg: ModelConfig, x):
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return x @ params["lm_head"]
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, Any]):
+    x, positions = embed_inputs(params, cfg, batch)
+    x, _ = _run_stages(params, cfg, x, positions, None, collect=False)
+    return _lm_head(params, cfg, x)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, Any]):
+    """Next-token cross-entropy (mean over non-padding positions)."""
+    logits = forward(params, cfg, batch).astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    weights = batch.get("loss_weights")
+    if weights is None:
+        return nll.mean()
+    return (nll * weights).sum() / jnp.maximum(weights.sum(), 1.0)
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, Any]):
+    x, positions = embed_inputs(params, cfg, batch)
+    x, caches = _run_stages(params, cfg, x, positions, None, collect=True)
+    return _lm_head(params, cfg, x[:, -1:]), caches
+
+
+def make_caches(cfg: ModelConfig, batch: int, seq_len: int):
+    """Empty stacked caches sized for ``seq_len`` context (decode dry-run)."""
+    dt = _dtype(cfg)
+    caches = []
+    for stage in cfg.stages:
+        stage_caches = []
+        for bs in stage.pattern:
+            c = {}
+            if bs.mixer == "attn":
+                c["attn"] = layers_mod.make_attn_cache(cfg, bs, batch, seq_len, dt)
+            elif bs.mixer == "mamba":
+                c["mamba"] = mamba_mod.make_mamba_cache(cfg, batch, dt)
+            stacked = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (stage.repeats,) + a.shape), c
+            )
+            stage_caches.append(stacked)
+        caches.append(stage_caches)
+    return caches
+
+
+def decode_step(params: Params, cfg: ModelConfig, caches, tokens_or_embeds, pos):
+    """One decode step. tokens_or_embeds: [B,1] ids or [B,1,d] embeddings;
+    pos: int32 scalar or [B] current position. Returns (logits, caches)."""
+    if cfg.input_mode == "embeddings" and tokens_or_embeds.ndim == 3:
+        batch = {"embeddings": tokens_or_embeds}
+    else:
+        batch = {"tokens": tokens_or_embeds}
+    b = tokens_or_embeds.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1, 1), (b, 1))
+    batch["positions"] = pos
+    x, positions = embed_inputs(params, cfg, batch)
+    x, new_caches = _run_stages(params, cfg, x, positions, caches, collect=False)
+    return _lm_head(params, cfg, x), new_caches
+
+
+# ---------------------------------------------------------------------------
+# FedSPU mask structure (see core/masks.py)
+# ---------------------------------------------------------------------------
+
+FF_BLOCK = 128  # TPU-aligned freezing granularity for d_ff units
+
+
+def _block_units(cfg: ModelConfig, bs: BlockSpec) -> Dict[str, int]:
+    """Freezable unit groups for a block: name -> n_units."""
+    u: Dict[str, int] = {}
+    if bs.mixer == "attn":
+        u["heads"] = cfg.n_heads
+    elif bs.mixer == "mamba":
+        u["ssd_heads"] = cfg.ssm_nheads
+    if bs.ffn == "mlp":
+        u["ff_blocks"] = max(1, cfg.d_ff // FF_BLOCK)
+    elif bs.ffn == "moe":
+        u["experts"] = cfg.n_experts
+    return u
+
+
+def mask_spec(cfg: ModelConfig):
+    """Returns (unit_counts, expand_fn).
+
+    unit_counts: list[stage] of list[pos] of {unit_name: n_units} — the
+    compact per-layer mask shapes are [repeats, n_units].
+
+    expand_fn(params, unit_masks) -> pytree matching ``params`` with
+    boolean "is-active" leaves (True = trained/communicated). Always-active
+    leaves (norms, embeddings, routers, biases...) map to scalar True.
+    """
+    unit_counts = [[_block_units(cfg, bs) for bs in st.pattern] for st in cfg.stages]
+
+    def unit_importance(tree: Params, ord: int = 2):
+        """Per-unit importance scores from a param (or grad) tree, on the
+        same unit partition as the masks. FedMP: ord=1 on params; Hermes:
+        ord=2 on params; PruneFL: ord=2 on grads."""
+
+        def norm(x, axes):
+            return jnp.sum(jnp.abs(x.astype(jnp.float32)) ** ord, axis=axes)
+
+        scores = []
+        for si, st in enumerate(cfg.stages):
+            stage_scores = []
+            for pi, bs in enumerate(st.pattern):
+                bp = tree["stages"][si][pi]
+                s: Dict[str, Any] = {}
+                if bs.mixer == "attn":
+                    r = bp["attn"]["wq"].shape[0]
+                    wq = bp["attn"]["wq"].reshape(r, cfg.d_model, cfg.n_heads, cfg.head_dim)
+                    wo = bp["attn"]["wo"].reshape(r, cfg.n_heads, cfg.head_dim, cfg.d_model)
+                    s["heads"] = norm(wq, (1, 3)) + norm(wo, (2, 3))
+                elif bs.mixer == "mamba":
+                    r = bp["mamba"]["out_proj"].shape[0]
+                    op = bp["mamba"]["out_proj"].reshape(
+                        r, cfg.ssm_nheads, cfg.ssm_headdim, cfg.d_model
+                    )
+                    s["ssd_heads"] = norm(op, (2, 3))
+                if bs.ffn == "mlp":
+                    r = bp["mlp"]["w_gate"].shape[0]
+                    nb = max(1, cfg.d_ff // FF_BLOCK)
+                    blk = cfg.d_ff // nb
+                    wg = bp["mlp"]["w_gate"].reshape(r, cfg.d_model, nb, blk)
+                    wd = bp["mlp"]["w_down"].reshape(r, nb, blk, cfg.d_model)
+                    s["ff_blocks"] = norm(wg, (1, 3)) + norm(wd, (2, 3))
+                elif bs.ffn == "moe":
+                    s["experts"] = norm(bp["moe"]["w_down"], (2, 3))
+                stage_scores.append(s)
+            scores.append(stage_scores)
+        return scores
+
+    def expand(params: Params, unit_masks):
+        def expand_block(bparams: Params, bs: BlockSpec, masks: Dict[str, Any]):
+            out: Params = {}
+            for mod, mp in bparams.items():
+                out[mod] = {k: True for k in mp}
+            if bs.mixer == "attn":
+                hm = masks["heads"]  # [R, H] bool
+                hd = cfg.head_dim
+                wm = jnp.repeat(hm, hd, axis=-1)  # [R, H*hd]
+                out["attn"]["wq"] = wm[:, None, :]
+                out["attn"]["wo"] = wm[:, :, None]
+                if cfg.qkv_bias:
+                    out["attn"]["bq"] = wm
+            elif bs.mixer == "mamba":
+                hm = masks["ssd_heads"]  # [R, nh]
+                p = cfg.ssm_headdim
+                din_m = jnp.repeat(hm, p, axis=-1)  # [R, din]
+                g, n = cfg.ssm_ngroups, cfg.ssm_state
+                nh = cfg.ssm_nheads
+                # in_proj columns: [z(din), x(din), B(g n), C(g n), dt(nh)]
+                cols = jnp.concatenate(
+                    [din_m, din_m, jnp.ones(hm.shape[:-1] + (2 * g * n,), bool), hm],
+                    axis=-1,
+                )
+                out["mamba"]["in_proj"] = cols[:, None, :]
+                out["mamba"]["A_log"] = hm
+                out["mamba"]["D"] = hm
+                out["mamba"]["dt_bias"] = hm
+                out["mamba"]["gnorm"] = din_m
+                out["mamba"]["out_proj"] = din_m[:, :, None]
+                conv_cols = jnp.concatenate(
+                    [din_m, jnp.ones(hm.shape[:-1] + (2 * g * n,), bool)], axis=-1
+                )
+                out["mamba"]["conv_w"] = conv_cols[:, None, :]
+            if bs.ffn == "mlp":
+                fm = masks["ff_blocks"]  # [R, nb]
+                blk = min(FF_BLOCK, cfg.d_ff)
+                fme = jnp.repeat(fm, blk, axis=-1)[:, : cfg.d_ff]
+                out["mlp"]["w_gate"] = fme[:, None, :]
+                out["mlp"]["w_up"] = fme[:, None, :]
+                out["mlp"]["w_down"] = fme[:, :, None]
+            elif bs.ffn == "moe":
+                em = masks["experts"]  # [R, E]
+                out["moe"]["w_gate"] = em[:, :, None, None]
+                out["moe"]["w_up"] = em[:, :, None, None]
+                out["moe"]["w_down"] = em[:, :, None, None]
+            return out
+
+        tree = {
+            "embed": True,
+            "final_norm": True,
+            "stages": [
+                [
+                    expand_block(params["stages"][si][pi], bs, unit_masks[si][pi])
+                    for pi, bs in enumerate(st.pattern)
+                ]
+                for si, st in enumerate(cfg.stages)
+            ],
+        }
+        if "lm_head" in params:
+            tree["lm_head"] = True
+        return tree
+
+    return unit_counts, expand, unit_importance
+
+
+def repeats_shapes(cfg: ModelConfig):
+    """Leading mask shapes parallel to mask_spec's unit_counts."""
+    return [
+        [{k: (st.repeats,) for k in _block_units(cfg, bs)} for bs in st.pattern]
+        for st in cfg.stages
+    ]

@@ -1,0 +1,236 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Top-k routing with normalized gates; tokens are dispatched into a
+[E, capacity, d] buffer via scatter (rank-within-expert computed by a
+stable sort, not the GShard one-hot cumsum, so memory stays O(tokens)).
+Experts are sharded over the ``model`` mesh axis; the dispatch/return
+resharding is the all-to-all signature of expert parallelism.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init, rmsnorm
+
+
+def _mesh_in_scope():
+    """The physical mesh when tracing under a ``with mesh:`` context."""
+    try:
+        from jax._src import mesh as mesh_lib
+
+        env = mesh_lib.thread_resources.env.physical_mesh
+        if env is not None and not env.empty:
+            return env
+    except Exception:  # noqa: BLE001 — no mesh context
+        pass
+    return None
+
+
+def _data_axes_in_scope():
+    """(axes, total_size) of the mesh data axes when tracing under a mesh
+    context; ((), 1) otherwise."""
+    env = _mesh_in_scope()
+    if env is not None:
+        axes = tuple(a for a in env.axis_names if a in ("pod", "data"))
+        size = 1
+        for a in axes:
+            size *= env.shape[a]
+        return axes, size
+    return (), 1
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_dff
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "router": _dense_init(ks[0], (d, e), jnp.float32),
+        "w_gate": _dense_init(ks[1], (e, d, f), dtype),
+        "w_up": _dense_init(ks[2], (e, d, f), dtype),
+        "w_down": _dense_init(ks[3], (e, f, d), dtype),
+    }
+
+
+def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    cap = int(math.ceil(n_tokens * cfg.moe_topk * cfg.capacity_factor / cfg.n_experts))
+    return max(8, ((cap + 7) // 8) * 8)  # pad to lane multiple
+
+
+def route_topk(router_w, y, cfg: ModelConfig):
+    """Returns (expert_idx [T,k], gates [T,k]) for flattened tokens y [T,d]."""
+    logits = y.astype(jnp.float32) @ router_w  # [T, E]
+    gate_vals, expert_idx = jax.lax.top_k(logits, cfg.moe_topk)
+    gates = jax.nn.softmax(gate_vals, axis=-1)  # normalize over chosen experts
+    return expert_idx, gates
+
+
+def dispatch_indices(expert_idx, n_experts: int, capacity: int):
+    """Rank each (token, choice) within its expert via stable sort.
+
+    expert_idx: [T, k] int32. Returns (flat_expert [N], rank [N], keep [N])
+    with N = T*k; ``keep`` is False for capacity-overflow entries.
+    """
+    n = expert_idx.size
+    flat_e = expert_idx.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, jnp.arange(n_experts, dtype=flat_e.dtype))
+    rank_sorted = jnp.arange(n, dtype=jnp.int32) - first[sorted_e].astype(jnp.int32)
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
+    keep = rank < capacity
+    return flat_e, rank, keep
+
+
+def _moe_tokens(params: dict, yf, cfg: ModelConfig):
+    """Dispatch + expert FFN + combine for flat tokens yf [T, d]."""
+    t, d = yf.shape
+    k = cfg.moe_topk
+    e = cfg.n_experts
+    cap = moe_capacity(cfg, t)
+
+    expert_idx, gates = route_topk(params["router"], yf, cfg)
+    flat_e, rank, keep = dispatch_indices(expert_idx, e, cap)
+
+    # dispatch: scatter tokens into [E, cap, d]
+    tok_idx = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    safe_rank = jnp.where(keep, rank, cap - 1)
+    buf = jnp.zeros((e, cap, d), yf.dtype)
+    contrib = jnp.where(keep[:, None], yf[tok_idx], 0)
+    buf = buf.at[flat_e, safe_rank].add(contrib)
+
+    # expert FFN on the buffer: [E, cap, d] x [E, d, f]
+    gate_h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"]))
+    up_h = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", gate_h * up_h, params["w_down"])
+
+    # combine: gather each (token, choice) result and mix by gate
+    gathered = out_buf[flat_e, safe_rank]  # [N, d]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    gflat = gates.reshape(-1).astype(gathered.dtype)
+    return jnp.zeros((t, d), gathered.dtype).at[tok_idx].add(gathered * gflat[:, None])
+
+
+def _moe_tokens_local(params_local, yf, cfg: ModelConfig, n_local_experts: int, expert_offset):
+    """Per-shard MoE under shard_map: route against the FULL router,
+    dispatch only the tokens whose expert lives on this shard (EP) or all
+    tokens against the local f-slice (TP), combine locally, and return the
+    PARTIAL per-token output — the caller psums over "model".
+    """
+    t, d = yf.shape
+    k = cfg.moe_topk
+    e = cfg.n_experts
+    cap = moe_capacity(cfg, t)
+
+    expert_idx, gates = route_topk(params_local["router"], yf, cfg)
+    flat_e, rank, keep = dispatch_indices(expert_idx, e, cap)
+    local_e = flat_e - expert_offset
+    on_shard = (local_e >= 0) & (local_e < n_local_experts)
+    keep = keep & on_shard
+    safe_e = jnp.clip(local_e, 0, n_local_experts - 1)
+
+    tok_idx = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    safe_rank = jnp.where(keep, rank, cap - 1)
+    buf = jnp.zeros((n_local_experts, cap, d), yf.dtype)
+    contrib = jnp.where(keep[:, None], yf[tok_idx], 0)
+    buf = buf.at[safe_e, safe_rank].add(contrib)
+
+    gate_h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params_local["w_gate"]))
+    up_h = jnp.einsum("ecd,edf->ecf", buf, params_local["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", gate_h * up_h, params_local["w_down"])
+
+    gathered = out_buf[safe_e, safe_rank]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    gflat = gates.reshape(-1).astype(gathered.dtype)
+    return jnp.zeros((t, d), gathered.dtype).at[tok_idx].add(gathered * gflat[:, None])
+
+
+def _moe_grouped_shardmap(params, yg, cfg: ModelConfig, mesh, daxes):
+    """§Perf: expert-parallel MoE with combine-before-reduce.
+
+    shard_map over the full mesh: groups ride the data axes, experts (or
+    their d_ff slices) ride "model". Each shard combines its partial
+    per-token output locally, then ONE psum over "model" moves O(T·d) —
+    not the O(E·cap·d) dispatch buffers a pjit gather forces.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    e = cfg.n_experts
+    n_model = mesh.shape["model"]
+    ep = e % n_model == 0  # expert-parallel, else d_ff TP fallback
+    w_spec = P(None, "model", None, None) if ep else P(None, None, None, "model")
+    w_down_spec = P(None, "model", None, None) if ep else P(None, None, "model", None)
+    n_local = e // n_model if ep else e
+
+    def per_shard(router, wg, wu, wd, yg_local):
+        # yg_local: [G_local, tg, d]; weights already shard-local
+        off = jax.lax.axis_index("model") * n_local if ep else 0
+        plocal = {"router": router, "w_gate": wg[0], "w_up": wu[0], "w_down": wd[0]}
+        out = jax.vmap(
+            lambda yt: _moe_tokens_local(plocal, yt, cfg, n_local, off)
+        )(yg_local)
+        return jax.lax.psum(out, "model")
+
+    in_specs = (
+        P(),  # router replicated
+        P(*w_spec),
+        P(*w_spec),
+        P(*w_down_spec),
+        P(daxes, None, None),
+    )
+    out_specs = P(daxes, None, None)
+    fn = jax.shard_map(
+        per_shard,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_vma=False,
+    )
+    return fn(
+        params["router"],
+        params["w_gate"][None],
+        params["w_up"][None],
+        params["w_down"][None],
+        yg,
+    )
+
+
+def moe_apply(params: dict, x, cfg: ModelConfig):
+    """x: [B, S, d] -> [B, S, d] (residual included).
+
+    §Perf (``cfg.moe_groups`` = G > 1): token-group dispatch — tokens are
+    split into G groups (aligned with the ``data``-sharded batch) and each
+    group runs capacity dispatch locally (GShard-style per-group capacity
+    semantics), via an explicit shard_map with combine-before-reduce.
+    """
+    b, s, d = x.shape
+    y = rmsnorm(x, params["norm"], cfg.norm_eps)
+    t = b * s
+    g = cfg.moe_groups if cfg.moe_groups and t % cfg.moe_groups == 0 else 1
+    if g > 1:
+        yg = y.reshape(g, t // g, d)
+        mesh = _mesh_in_scope()
+        daxes, dsize = _data_axes_in_scope()
+        if mesh is not None and "model" in mesh.axis_names and daxes and g % dsize == 0:
+            out = _moe_grouped_shardmap(params, yg, cfg, mesh, daxes)
+        else:
+            out = jax.vmap(lambda yt: _moe_tokens(params, yt, cfg))(yg)
+        out = out.reshape(b, s, d)
+    else:
+        out = _moe_tokens(params, y.reshape(t, d), cfg).reshape(b, s, d)
+    return x + out.astype(x.dtype)
+
+
+def aux_load_balance_loss(router_w, y, cfg: ModelConfig):
+    """Switch-style load-balance auxiliary loss (mean over tokens)."""
+    t, _ = y.shape
+    logits = y.astype(jnp.float32) @ router_w
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, expert_idx = jax.lax.top_k(logits, cfg.moe_topk)
+    counts = jnp.zeros((cfg.n_experts,), jnp.float32).at[expert_idx.reshape(-1)].add(1.0)
+    frac_tokens = counts / (t * cfg.moe_topk)
+    frac_probs = probs.mean(axis=0)
+    return cfg.n_experts * jnp.sum(frac_tokens * frac_probs)

@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (  # noqa: F401
+    OptState,
+    adamw,
+    make_optimizer,
+    masked_wrap,
+    sgd,
+)

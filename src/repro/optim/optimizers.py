@@ -1,0 +1,187 @@
+"""Minimal optimizer substrate (no optax offline): SGD(+momentum), AdamW,
+and mask-aware wrappers for FedSPU's frozen-parameter semantics.
+
+An optimizer is a pair of pure functions:
+
+  init(params)                  -> OptState
+  update(grads, state, params)  -> (updates, new_state)
+
+``updates`` are ADDED to params (i.e. they already include the -lr sign),
+matching the optax convention so the two libraries are drop-in
+interchangeable on TPU deployments.
+
+``masked_wrap`` lifts any optimizer to FedSPU semantics: frozen parameters
+receive exactly zero update AND their optimizer state (momentum, adam
+moments) is left untouched — freezing must not decay a frozen neuron's
+momentum, otherwise resuming training after unfreezing would restart from
+cold state and break the paper's "personal parameters persist" invariant.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray  # int32 scalar
+    mu: Any  # first moment / momentum (tree or None-leaf zeros)
+    nu: Any  # second moment (adam) or None
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], tuple]
+
+
+def _zeros_like_f32(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+# ---------------------------------------------------------------------------
+# SGD (+ momentum, nesterov)
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr: float, momentum: float = 0.0, nesterov: bool = False, weight_decay: float = 0.0) -> Optimizer:
+    use_mom = momentum != 0.0
+
+    def init(params) -> OptState:
+        mu = _zeros_like_f32(params) if use_mom else None
+        return OptState(jnp.zeros((), jnp.int32), mu, None)
+
+    def update(grads, state: OptState, params):
+        def one(g, p, m):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            if not use_mom:
+                return (-lr * g).astype(p.dtype), None
+            m = momentum * m + g
+            d = g + momentum * m if nesterov else m
+            return (-lr * d).astype(p.dtype), m
+
+        if use_mom:
+            pairs = jax.tree.map(one, grads, params, state.mu)
+            upd = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+            mu = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        else:
+            upd = jax.tree.map(lambda g, p: one(g, p, None)[0], grads, params)
+            mu = None
+        return upd, OptState(state.step + 1, mu, None)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params) -> OptState:
+        return OptState(jnp.zeros((), jnp.int32), _zeros_like_f32(params), _zeros_like_f32(params))
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def one(g, p, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / c1
+            vhat = v / c2
+            d = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                d = d + weight_decay * p.astype(jnp.float32)
+            return (-lr * d).astype(p.dtype), m, v
+
+        triples = jax.tree.map(one, grads, params, state.mu, state.nu)
+        is_t = lambda x: isinstance(x, tuple)
+        upd = jax.tree.map(lambda t: t[0], triples, is_leaf=is_t)
+        mu = jax.tree.map(lambda t: t[1], triples, is_leaf=is_t)
+        nu = jax.tree.map(lambda t: t[2], triples, is_leaf=is_t)
+        return upd, OptState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# FedSPU mask-aware wrapper
+# ---------------------------------------------------------------------------
+
+
+def masked_wrap(opt: Optimizer) -> Optimizer:
+    """Lift ``opt`` to take (grads, state, params, mask_tree).
+
+    Frozen parameters (mask False) receive zero update and keep their
+    previous optimizer state. mask leaves are bool arrays broadcastable to
+    the param leaf, or python True (always active).
+    """
+
+    def update(grads, state: OptState, params, mask_tree=None):
+        if mask_tree is None:
+            return opt.update(grads, state, params)
+
+        lp, treedef = jax.tree.flatten(params)
+        lm = treedef.flatten_up_to(mask_tree)
+
+        def mask_like(x_tree):
+            lx = treedef.flatten_up_to(x_tree)
+            out = []
+            for x, m in zip(lx, lm):
+                if m is True or x is None:
+                    out.append(x)
+                else:
+                    out.append(x * jnp.broadcast_to(m, x.shape).astype(x.dtype))
+            return jax.tree.unflatten(treedef, out)
+
+        grads = mask_like(grads)
+        upd, new_state = opt.update(grads, state, params)
+        upd = mask_like(upd)
+
+        # frozen entries keep old moments (no decay while frozen)
+        def keep_frozen(new_tree, old_tree):
+            if new_tree is None or old_tree is None:
+                return new_tree
+            ln = treedef.flatten_up_to(new_tree)
+            lo = treedef.flatten_up_to(old_tree)
+            out = []
+            for n, o, m in zip(ln, lo, lm):
+                if m is True:
+                    out.append(n)
+                else:
+                    out.append(jnp.where(jnp.broadcast_to(m, n.shape), n, o))
+            return jax.tree.unflatten(treedef, out)
+
+        new_state = OptState(
+            new_state.step,
+            keep_frozen(new_state.mu, state.mu),
+            keep_frozen(new_state.nu, state.nu),
+        )
+        return upd, new_state
+
+    return Optimizer(opt.init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype), params, updates)
+
+
+def make_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

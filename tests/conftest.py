@@ -1,0 +1,7 @@
+# NOTE: no XLA_FLAGS / device-count overrides here — smoke tests and
+# benches must see the real single CPU device (dry-run sets its own
+# flags in its own process; see repro/launch/dryrun.py).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

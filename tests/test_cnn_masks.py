@@ -1,0 +1,76 @@
+"""Paper-faithful CNN neuron masks: Lemma 1's p² rule (a weight is active
+iff BOTH endpoint neurons are active)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masks as M
+from repro.models import cnn
+
+CFG = cnn.CIFAR_CNN
+
+
+def test_weight_active_iff_both_neurons_active():
+    unit_counts, expand, _ = cnn.mask_spec(CFG)
+    params = cnn.init_params(CFG, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    um = M.sample_unit_masks(key, unit_counts, 0.5)
+    tree = expand(params, um)
+    # fc1 weights: [fc_hidden0, fc_hidden1]; mask = outer(prev, cur)
+    m_prev = np.asarray(um["fc0"])
+    m_cur = np.asarray(um["fc1"])
+    got = np.asarray(jnp.broadcast_to(tree["fc1"]["w"], params["fc1"]["w"].shape))
+    want = np.outer(m_prev, m_cur)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_expected_active_fraction_near_p_squared():
+    """E[active weight fraction] ≈ p² for inner FC layers (Lemma 1)."""
+    unit_counts, expand, _ = cnn.mask_spec(CFG)
+    params = cnn.init_params(CFG, jax.random.PRNGKey(0))
+    p = 0.5
+    fracs = []
+    for s in range(20):
+        um = M.sample_unit_masks(jax.random.PRNGKey(s), unit_counts, p)
+        tree = expand(params, um)
+        m = np.asarray(jnp.broadcast_to(tree["fc1"]["w"], params["fc1"]["w"].shape))
+        fracs.append(m.mean())
+    assert abs(np.mean(fracs) - p * p) < 0.05
+
+
+def test_output_head_rows_follow_prev_layer_only():
+    """The classifier head's output neurons are never masked (the paper
+    keeps every class logit); only its inputs follow the previous layer."""
+    unit_counts, expand, _ = cnn.mask_spec(CFG)
+    params = cnn.init_params(CFG, jax.random.PRNGKey(0))
+    um = M.sample_unit_masks(jax.random.PRNGKey(2), unit_counts, 0.4)
+    tree = expand(params, um)
+    head = tree["fc2"]
+    assert head["b"] is True
+    m = np.asarray(jnp.broadcast_to(head["w"], params["fc2"]["w"].shape))
+    # all columns identical (no output masking)
+    assert (m == m[:, :1]).all()
+
+
+def test_importance_scores_shapes():
+    unit_counts, _, importance = cnn.mask_spec(CFG)
+    params = cnn.init_params(CFG, jax.random.PRNGKey(0))
+    scores = importance(params, 2)
+    for name, n in unit_counts.items():
+        assert scores[name].shape == (n,)
+        assert bool(jnp.isfinite(scores[name]).all())
+
+
+def test_conv_flatten_mask_tiles_channels():
+    """Flattened conv output: mask must tile per spatial position."""
+    unit_counts, expand, _ = cnn.mask_spec(CFG)
+    params = cnn.init_params(CFG, jax.random.PRNGKey(0))
+    um = M.sample_unit_masks(jax.random.PRNGKey(3), unit_counts, 0.5)
+    tree = expand(params, um)
+    conv_m = np.asarray(um["conv1"])
+    w_mask = np.asarray(jnp.broadcast_to(tree["fc0"]["w"], params["fc0"]["w"].shape))
+    fc0_rows = w_mask.any(axis=1)  # row active iff its input neuron is
+    spatial = len(fc0_rows) // len(conv_m)
+    np.testing.assert_array_equal(
+        fc0_rows.reshape(spatial, len(conv_m)), np.broadcast_to(conv_m, (spatial, len(conv_m)))
+    )

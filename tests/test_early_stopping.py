@@ -1,0 +1,46 @@
+"""Early-stopping state machine (paper §3.2, Algorithm 2)."""
+import numpy as np
+import pytest
+
+from repro.core import early_stopping as es
+
+
+def test_combined_loss_eq6():
+    assert es.combined_loss(1.0, 2.0, 0.7) == pytest.approx(0.7 * 1.0 + 0.3 * 2.0)
+
+
+def test_client_stops_on_nondecreasing_loss():
+    st = es.ESState.init(3)
+    st = es.update(st, [0, 1], [1.0, 2.0])
+    assert not st.stopped.any()
+    st = es.update(st, [0, 1], [0.9, 2.5])  # client 1 increased -> stops
+    assert not st.stopped[0] and st.stopped[1]
+
+
+def test_first_round_never_stops():
+    st = es.ESState.init(2)
+    st = es.update(st, [0, 1], [100.0, 100.0])  # prev = inf
+    assert not st.stopped.any()
+
+
+def test_all_stopped_terminates():
+    st = es.ESState.init(2)
+    st = es.update(st, [0, 1], [1.0, 1.0])
+    st = es.update(st, [0, 1], [2.0, 2.0])
+    assert st.all_stopped
+
+
+def test_equal_loss_does_not_stop():
+    """Paper: stop iff L_t > L_{t-1} (strictly greater)."""
+    st = es.ESState.init(1)
+    st = es.update(st, [0], [1.0])
+    st = es.update(st, [0], [1.0])
+    assert not st.stopped[0]
+
+
+def test_non_participants_untouched():
+    st = es.ESState.init(3)
+    st = es.update(st, [0], [1.0])
+    st = es.update(st, [0], [2.0])
+    assert st.stopped.tolist() == [True, False, False]
+    assert np.isinf(st.prev_loss[1:]).all()

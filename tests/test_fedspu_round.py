@@ -1,0 +1,161 @@
+"""Integration tests of the FedSPU round engine (Algorithm 1) and the
+dropout baselines, on the paper's CNN track."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fedspu, masks as M
+from repro.models import cnn
+
+CFG = cnn.CIFAR_CNN
+
+
+@pytest.fixture(scope="module")
+def setup():
+    flm = fedspu.bind_cnn(CFG)
+    key = jax.random.PRNGKey(0)
+    gp = cnn.init_params(CFG, key)
+    C, steps, bs = 4, 2, 8
+    rng = np.random.default_rng(0)
+    locals_ = jax.tree.map(lambda x: x[None] + 0.01 * jnp.asarray(
+        rng.normal(size=(C,) + x.shape), x.dtype), gp)
+    keys = jax.random.split(jax.random.PRNGKey(1), C)
+    batches = {
+        "x": jnp.asarray(rng.normal(size=(C, steps, bs, 32, 32, 3)), jnp.float32),
+        "y": jnp.asarray(rng.integers(0, 10, (C, steps, bs)), jnp.int32),
+    }
+    weights = jnp.asarray(rng.random(C) + 0.5, jnp.float32)
+    return flm, gp, locals_, keys, batches, weights
+
+
+def _round(flm, gp, locals_, keys, p, batches, weights, method, layout="vmap", lr=0.01):
+    fn = fedspu.fl_round_vmap if layout == "vmap" else fedspu.fl_round_scan
+    return jax.jit(
+        lambda g, l, k, pr, b, w: fn(flm, g, l, k, pr, b, w, method, lr)
+    )(gp, locals_, keys, p, batches, weights)
+
+
+def test_vmap_scan_equivalence(setup):
+    """The spatial and sequential cohort layouts are the same algorithm."""
+    flm, gp, locals_, keys, batches, weights = setup
+    p = jnp.asarray([0.2, 0.4, 0.8, 1.0])
+    gv, lv, lossv, fv = _round(flm, gp, locals_, keys, p, batches, weights, "fedspu", "vmap")
+    gs, ls, losss, fs = _round(flm, gp, locals_, keys, p, batches, weights, "fedspu", "scan")
+    for a, b in zip(jax.tree.leaves(gv), jax.tree.leaves(gs)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lossv), np.asarray(losss), rtol=1e-5)
+
+
+def test_fedspu_frozen_params_persist(setup):
+    """The paper's core invariant: a client's frozen parameters are
+    untouched by the round (they stay at the *local personal* values)."""
+    flm, gp, locals_, keys, batches, weights = setup
+    p = jnp.asarray([0.3, 0.3, 0.3, 0.3])
+    _, new_locals, _, _ = _round(flm, gp, locals_, keys, p, batches, weights, "fedspu")
+    # re-derive each client's mask and check frozen entries
+    for c in range(4):
+        um = fedspu.sample_client_masks(flm, gp, keys[c], p[c], "fedspu")
+        mask_tree = flm.expand(gp, um)
+        lp = jax.tree.map(lambda x: x[c], locals_)
+        nl = jax.tree.map(lambda x: x[c], new_locals)
+        lt, treedef = jax.tree.flatten(lp)
+        nt = treedef.flatten_up_to(nl)
+        mt = treedef.flatten_up_to(mask_tree)
+        found_frozen = False
+        for old, new, m in zip(lt, nt, mt):
+            if m is True:
+                continue
+            mm = np.broadcast_to(np.asarray(m), old.shape)
+            if (~mm).any():
+                found_frozen = True
+                np.testing.assert_array_equal(np.asarray(new)[~mm], np.asarray(old)[~mm])
+        assert found_frozen
+
+
+def test_dropout_inactive_params_zero_during_training(setup):
+    """Baselines prune: the trained model's inactive entries are zero."""
+    flm, gp, locals_, keys, batches, weights = setup
+    p = jnp.asarray([0.5, 0.5, 0.5, 0.5])
+    _, new_locals, _, _ = _round(flm, gp, locals_, keys, p, batches, weights, "fjord")
+    um = fedspu.sample_client_masks(flm, gp, keys[0], p[0], "fjord")
+    mask_tree = flm.expand(gp, um)
+    nl = jax.tree.map(lambda x: x[0], new_locals)
+    lt, treedef = jax.tree.flatten(nl)
+    mt = treedef.flatten_up_to(mask_tree)
+    for new, m in zip(lt, mt):
+        if m is True:
+            continue
+        mm = np.broadcast_to(np.asarray(m), new.shape)
+        assert (np.asarray(new)[~mm] == 0).all()
+
+
+def test_p1_fedspu_equals_fedavg(setup):
+    """p_k = 1 for everyone ⇒ no freezing ⇒ plain FedAvg over the cohort."""
+    flm, gp, locals_, keys, batches, weights = setup
+    p = jnp.ones((4,))
+    ng, nl, _, fracs = _round(flm, gp, locals_, keys, p, batches, weights, "fedspu")
+    np.testing.assert_allclose(np.asarray(fracs), 1.0)
+    # manual FedAvg: train each client from the GLOBAL start, average
+    expected = []
+    for c in range(4):
+        lp, _ = fedspu.local_train(
+            flm, gp, jax.tree.map(lambda _: True, gp), jax.tree.map(lambda x: x[c], batches), 0.01
+        )
+        expected.append(lp)
+    w = np.asarray(weights)
+    for leaf_path in range(len(jax.tree.leaves(gp))):
+        got = np.asarray(jax.tree.leaves(ng)[leaf_path])
+        stack = np.stack([np.asarray(jax.tree.leaves(e)[leaf_path]) for e in expected])
+        want = (stack * w[:, None].reshape((4,) + (1,) * (stack.ndim - 1))).sum(0) / w.sum()
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+
+def test_aggregate_fallback_keeps_old_global(setup):
+    """Fig. 9: parameters no client held active keep the old global value."""
+    flm, gp, locals_, keys, batches, weights = setup
+    # all clients tiny p -> most units frozen; aggregate manually
+    p = jnp.asarray([0.1] * 4)
+    _, new_locals, _, _ = _round(flm, gp, locals_, keys, p, batches, weights, "fedspu")
+    ums = [fedspu.sample_client_masks(flm, gp, keys[c], p[c], "fedspu") for c in range(4)]
+    um_stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ums)
+    ng = fedspu.aggregate(flm, gp, new_locals, um_stacked, weights)
+    # find entries where EVERY client was frozen
+    mask_trees = [fedspu.normalize_mask_tree(gp, flm.expand(gp, u)) for u in ums]
+    lt, treedef = jax.tree.flatten(gp)
+    ngl = treedef.flatten_up_to(ng)
+    any_active = [
+        np.broadcast_to(np.asarray(sum(jnp.broadcast_to(m, g.shape).astype(jnp.int32)
+                                       for m in [treedef.flatten_up_to(mt)[i] for mt in mask_trees])), g.shape) > 0
+        for i, g in enumerate(lt)
+    ]
+    checked = False
+    for g, n, act in zip(lt, ngl, any_active):
+        dead = ~act
+        if dead.any():
+            checked = True
+            np.testing.assert_array_equal(np.asarray(n)[dead], np.asarray(g)[dead])
+    assert checked
+
+
+def test_local_train_decreases_loss(setup):
+    flm, gp, *_ = setup
+    rng = np.random.default_rng(3)
+    batches = {
+        "x": jnp.asarray(rng.normal(size=(8, 16, 32, 32, 3)), jnp.float32),
+        "y": jnp.asarray(rng.integers(0, 10, (8, 16)), jnp.int32),
+    }
+    mask = jax.tree.map(lambda _: True, gp)
+    first = float(flm.loss_fn(gp, jax.tree.map(lambda x: x[0], batches)))
+    trained, _ = fedspu.local_train(flm, gp, mask, batches, 0.05)
+    last = float(flm.loss_fn(trained, jax.tree.map(lambda x: x[0], batches)))
+    assert last < first
+
+
+def test_heterogeneous_p_communication_scales(setup):
+    """Active fraction (≈ comm volume) grows with p_k — Table 3's premise."""
+    flm, gp, locals_, keys, batches, weights = setup
+    p = jnp.asarray([0.2, 0.4, 0.6, 1.0])
+    _, _, _, fracs = _round(flm, gp, locals_, keys, p, batches, weights, "fedspu")
+    f = np.asarray(fracs)
+    assert (np.diff(f) > 0).all() and f[-1] == pytest.approx(1.0, abs=1e-6)

@@ -1,0 +1,127 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp
+oracle, assert_allclose."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(8, 16), (100, 96), (300, 200), (256, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_masked_update(shape, dtype):
+    w = jnp.asarray(RNG.normal(size=shape), dtype)
+    g = jnp.asarray(RNG.normal(size=shape), dtype)
+    m = jnp.asarray(RNG.random(shape[0]) < 0.5)
+    out = ops.masked_update(w, g, m, 0.1, mode="interpret")
+    want = ref.masked_update_ref(w, g, m, 0.1)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+    # frozen rows bitwise-identical to the input
+    frozen = ~np.asarray(m)
+    np.testing.assert_array_equal(np.asarray(out)[frozen], np.asarray(w)[frozen])
+
+
+@pytest.mark.parametrize("t,d,f,block", [(64, 32, 256, 128), (100, 96, 256, 128), (512, 128, 512, 128), (32, 16, 128, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_masked_matmul(t, d, f, block, dtype):
+    x = jnp.asarray(RNG.normal(size=(t, d)), dtype)
+    dy = jnp.asarray(RNG.normal(size=(t, f)), dtype)
+    mb = jnp.asarray(RNG.random(f // block) < 0.5)
+    out = ops.masked_matmul(x, dy, mb, block, mode="interpret")
+    want = ref.masked_matmul_ref(x, dy, mb, block)
+    tol = dict(rtol=5e-2, atol=5e-1) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32), **tol)
+    # frozen blocks exactly zero
+    mm = np.repeat(np.asarray(mb), block)
+    assert (np.asarray(out, np.float32)[:, ~mm] == 0).all()
+
+
+@pytest.mark.parametrize("c,m,n", [(3, 16, 32), (5, 70, 50), (10, 128, 256)])
+def test_masked_aggregate(c, m, n):
+    ws = jnp.asarray(RNG.normal(size=(c, m, n)), jnp.float32)
+    ms = jnp.asarray(RNG.random((c, m)) < 0.4)
+    wt = jnp.asarray(RNG.random(c) + 0.5, jnp.float32)
+    go = jnp.asarray(RNG.normal(size=(m, n)), jnp.float32)
+    out = ops.masked_aggregate(ws, ms, wt, go, mode="interpret")
+    want = ref.masked_aggregate_ref(ws, ms, wt, go)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_masked_aggregate_all_frozen_row_keeps_global():
+    c, m, n = 4, 24, 16
+    ws = jnp.asarray(RNG.normal(size=(c, m, n)), jnp.float32)
+    ms = jnp.zeros((c, m), bool).at[:, :8].set(True)  # rows 8.. untouched
+    wt = jnp.ones((c,))
+    go = jnp.asarray(RNG.normal(size=(m, n)), jnp.float32)
+    out = np.asarray(ops.masked_aggregate(ws, ms, wt, go, mode="interpret"))
+    np.testing.assert_array_equal(out[8:], np.asarray(go)[8:])
+
+
+@pytest.mark.parametrize("s,window", [(128, None), (256, None), (256, 64), (200, 100)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(s, window, dtype):
+    b, h, kv, hd = 2, 4, 2, 64
+    q = jnp.asarray(RNG.normal(size=(b, h, s, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, kv, s, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, kv, s, hd)), dtype)
+    out = ops.flash_attention(q, k, v, window, mode="interpret")
+    want = ref.flash_attention_ref(q, k, v, window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_flash_attention_mha_no_gqa():
+    b, h, s, hd = 1, 8, 128, 32
+    q = jnp.asarray(RNG.normal(size=(b, h, s, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, h, s, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, h, s, hd)), jnp.float32)
+    out = ops.flash_attention(q, k, v, mode="interpret")
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("l,h,p,g,n", [(128, 2, 16, 1, 16), (256, 4, 32, 2, 16), (384, 2, 64, 2, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan(l, h, p, g, n, dtype):
+    b = 2
+    x = jnp.asarray(RNG.normal(size=(b, l, h, p)), dtype)
+    dt = jnp.asarray(RNG.random((b, l, h)) * 0.1 + 0.01, jnp.float32)
+    A = -jnp.asarray(RNG.random(h) + 0.5, jnp.float32)
+    B = jnp.asarray(RNG.normal(size=(b, l, g, n)), dtype)
+    C = jnp.asarray(RNG.normal(size=(b, l, g, n)), dtype)
+    y, st = ops.ssd_scan(x, dt, A, B, C, chunk=128, mode="interpret")
+    y_r, st_r = ref.ssd_chunked_ref(x, dt, A, B, C, chunk=128)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(y_r, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_r), **tol)
+
+
+def test_ssd_scan_matches_sequential_recurrence():
+    """The chunked dual form must equal the naive per-token recurrence."""
+    from repro.models.mamba import ssd_decode_step
+
+    b, l, h, p, g, n = 1, 64, 2, 8, 1, 8
+    x = jnp.asarray(RNG.normal(size=(b, l, h, p)), jnp.float32)
+    dt = jnp.asarray(RNG.random((b, l, h)) * 0.1 + 0.01, jnp.float32)
+    A = -jnp.asarray(RNG.random(h) + 0.5, jnp.float32)
+    B = jnp.asarray(RNG.normal(size=(b, l, g, n)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(b, l, g, n)), jnp.float32)
+    y, st = ops.ssd_scan(x, dt, A, B, C, chunk=32, mode="interpret")
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for i in range(l):
+        yi, state = ssd_decode_step(state, x[:, i], dt[:, i], A, B[:, i], C[:, i])
+        ys.append(yi)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_seq), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(state), rtol=2e-3, atol=2e-3)

@@ -1,0 +1,131 @@
+"""Property tests for the mask algebra (core/masks.py) — the heart of
+FedSPU's correctness."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import masks as M
+
+hypothesis.settings.register_profile("ci", deadline=None, max_examples=30)
+hypothesis.settings.load_profile("ci")
+
+
+@given(
+    n=st.integers(2, 64),
+    p=st.floats(0.01, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sample_unit_masks_exact_count(n, p, seed):
+    """Paper §3.1 ①: exactly round(p·n) (≥1) units are active."""
+    key = jax.random.PRNGKey(seed)
+    masks = M.sample_unit_masks(key, {"layer": n}, p, method="random")
+    k_expected = max(1, int(np.round(p * n)))
+    assert int(masks["layer"].sum()) == k_expected
+
+
+@given(n=st.integers(2, 32), p=st.floats(0.1, 0.9))
+def test_fjord_ordered_prefix(n, p):
+    """FjORD keeps the leftmost units: the mask must be a prefix."""
+    key = jax.random.PRNGKey(0)
+    m = np.asarray(M.sample_unit_masks(key, {"l": n}, p, method="ordered")["l"])
+    k = m.sum()
+    assert m[:k].all() and not m[k:].any()
+
+
+@given(n=st.integers(2, 32), seed=st.integers(0, 1000))
+def test_importance_masks_keep_largest(n, seed):
+    rng = np.random.default_rng(seed)
+    scores = rng.normal(size=n).astype(np.float32)
+    key = jax.random.PRNGKey(0)
+    m = np.asarray(
+        M.sample_unit_masks(
+            key, {"l": n}, 0.5, scores_tree={"l": jnp.asarray(scores)}, method="importance"
+        )["l"]
+    )
+    k = m.sum()
+    kept = scores[m]
+    dropped = scores[~m]
+    if len(dropped):
+        assert kept.min() >= dropped.max() - 1e-6
+
+
+def test_merge_active_identity_and_complement():
+    """FedSPU merge: active ⇐ global, frozen ⇐ local; all-active mask
+    reproduces the global exactly; all-frozen keeps the local."""
+    g = {"w": jnp.arange(12.0).reshape(3, 4)}
+    l = {"w": -jnp.ones((3, 4))}
+    all_on = {"w": jnp.ones((3, 1), bool)}
+    all_off = {"w": jnp.zeros((3, 1), bool)}
+    np.testing.assert_array_equal(np.asarray(M.merge_active(g, l, all_on)["w"]), np.asarray(g["w"]))
+    np.testing.assert_array_equal(np.asarray(M.merge_active(g, l, all_off)["w"]), np.asarray(l["w"]))
+
+
+@given(seed=st.integers(0, 1000))
+def test_merge_active_partition(seed):
+    """Every element of the merge comes from exactly one of (global, local)."""
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=(6, 5)), jnp.float32)}
+    l = {"w": jnp.asarray(rng.normal(size=(6, 5)), jnp.float32)}
+    m = {"w": jnp.asarray(rng.random((6, 1)) < 0.5)}
+    out = np.asarray(M.merge_active(g, l, m)["w"])
+    mm = np.broadcast_to(np.asarray(m["w"]), (6, 5))
+    np.testing.assert_array_equal(out[mm], np.asarray(g["w"])[mm])
+    np.testing.assert_array_equal(out[~mm], np.asarray(l["w"])[~mm])
+
+
+@given(seed=st.integers(0, 1000))
+def test_mask_grads_zeroes_frozen(seed):
+    """Eq. 5: frozen parameters receive exactly zero gradient."""
+    rng = np.random.default_rng(seed)
+    grads = {"w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32), "b": jnp.ones((3,))}
+    mask = {"w": jnp.asarray(rng.random((4, 1)) < 0.5), "b": True}
+    out = M.mask_grads(grads, mask)
+    mm = np.broadcast_to(np.asarray(mask["w"]), (4, 3))
+    assert (np.asarray(out["w"])[~mm] == 0).all()
+    assert (np.asarray(out["w"])[mm] == np.asarray(grads["w"])[mm]).all()
+    np.testing.assert_array_equal(np.asarray(out["b"]), np.asarray(grads["b"]))
+
+
+def test_mask_fraction_compact_vs_broadcast():
+    """mask_fraction on compact (broadcastable) masks equals the fraction
+    of the *expanded* parameter mask — and stays finite at huge sizes."""
+    params = {"w": jnp.zeros((8, 6)), "v": jnp.zeros((10,))}
+    mask = {"w": jnp.asarray([True, False, True, False, True, False, True, False])[:, None], "v": True}
+    frac = float(M.mask_fraction(mask, params))
+    expected = (4 * 6 + 10) / (48 + 10)
+    assert abs(frac - expected) < 1e-6
+
+
+@given(p=st.floats(0.05, 1.0), seed=st.integers(0, 100))
+def test_apply_param_mask_prunes(p, seed):
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=(6, 4)), jnp.float32)}
+    key = jax.random.PRNGKey(seed)
+    units = M.sample_unit_masks(key, {"w": 6}, p)
+    mask = {"w": units["w"][:, None]}
+    out = np.asarray(M.apply_param_mask(params, mask)["w"])
+    mm = np.broadcast_to(np.asarray(mask["w"]), (6, 4))
+    assert (out[~mm] == 0).all()
+
+
+def test_rank_desc_is_permutation():
+    scores = jnp.asarray([3.0, 1.0, 2.0, 5.0])
+    r = np.asarray(M.rank_desc(scores))
+    assert sorted(r.tolist()) == [0, 1, 2, 3]
+    assert r[3] == 0 and r[1] == 3  # largest gets rank 0
+
+
+def test_traced_k_matches_static():
+    """The rank-vs-k trick must work with a traced p (vmapped cohorts)."""
+    key = jax.random.PRNGKey(0)
+
+    def sample(p):
+        return M.sample_unit_masks(key, {"l": 10}, p)["l"]
+
+    traced = jax.jit(sample)(jnp.float32(0.4))
+    static = sample(0.4)
+    np.testing.assert_array_equal(np.asarray(traced), np.asarray(static))

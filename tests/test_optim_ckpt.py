@@ -1,0 +1,90 @@
+"""Optimizer + checkpoint substrates."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.optim import adamw, masked_wrap, sgd
+from repro.optim.optimizers import apply_updates
+
+
+def _params():
+    return {"a": jnp.ones((4, 3)), "b": [jnp.zeros((2,)), jnp.full((3, 3), 2.0)]}
+
+
+def test_sgd_matches_manual():
+    p = _params()
+    g = jax.tree.map(jnp.ones_like, p)
+    opt = sgd(0.1)
+    st = opt.init(p)
+    upd, _ = opt.update(g, st, p)
+    new = apply_updates(p, upd)
+    np.testing.assert_allclose(np.asarray(new["a"]), 0.9)
+
+
+def test_sgd_momentum_accumulates():
+    p = _params()
+    g = jax.tree.map(jnp.ones_like, p)
+    opt = sgd(1.0, momentum=0.5)
+    st = opt.init(p)
+    upd1, st = opt.update(g, st, p)
+    upd2, st = opt.update(g, st, p)
+    np.testing.assert_allclose(np.asarray(upd1["a"]), -1.0)
+    np.testing.assert_allclose(np.asarray(upd2["a"]), -1.5)  # 1 + 0.5·1
+
+
+def test_adamw_first_step_is_lr_sized():
+    p = _params()
+    g = jax.tree.map(lambda x: jnp.ones_like(x) * 7.0, p)
+    opt = adamw(0.01)
+    st = opt.init(p)
+    upd, st = opt.update(g, st, p)
+    # bias-corrected first step ≈ -lr·sign(g)
+    np.testing.assert_allclose(np.asarray(upd["a"]), -0.01, rtol=1e-4)
+    assert int(st.step) == 1
+
+
+@pytest.mark.parametrize("base", ["sgd_m", "adamw"])
+def test_masked_wrap_freezes(base):
+    opt = masked_wrap(sgd(0.1, momentum=0.9) if base == "sgd_m" else adamw(0.01))
+    p = _params()
+    g = jax.tree.map(jnp.ones_like, p)
+    mask = {
+        "a": jnp.asarray([True, False, True, False])[:, None],
+        "b": [True, jnp.asarray([True, False, True])[None, :]],
+    }
+    st = opt.init(p)
+    upd, st2 = opt.update(g, st, p, mask)
+    new = apply_updates(p, upd)
+    # frozen rows/cols unchanged
+    np.testing.assert_array_equal(np.asarray(new["a"])[1], np.asarray(p["a"])[1])
+    assert not np.array_equal(np.asarray(new["a"])[0], np.asarray(p["a"])[0])
+    np.testing.assert_array_equal(np.asarray(new["b"][1])[:, 1], np.asarray(p["b"][1])[:, 1])
+    # frozen optimizer moments untouched
+    assert float(st2.mu["a"][1, 0]) == 0.0
+    assert float(st2.mu["a"][0, 0]) != 0.0
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"params": _params(), "step": jnp.asarray(3)}
+    ckpt.save_tree(str(tmp_path), 5, tree)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    back = ckpt.restore_tree(str(tmp_path), 5, tree)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_latest_and_missing(tmp_path):
+    assert ckpt.latest_step(str(tmp_path)) is None
+    ckpt.save_tree(str(tmp_path), 1, {"x": jnp.ones(2)})
+    ckpt.save_tree(str(tmp_path), 10, {"x": jnp.ones(2)})
+    assert ckpt.latest_step(str(tmp_path)) == 10
+    with pytest.raises(KeyError):
+        ckpt.restore_tree(str(tmp_path), 10, {"y": jnp.ones(2)})
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    ckpt.save_tree(str(tmp_path), 0, {"x": jnp.ones((2, 2))})
+    with pytest.raises(ValueError):
+        ckpt.restore_tree(str(tmp_path), 0, {"x": jnp.ones((3, 2))})

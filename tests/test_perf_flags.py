@@ -1,0 +1,71 @@
+"""§Perf optimization flags must not change semantics:
+compact aggregation == naive; remat == plain backward; grouped MoE
+matches ungrouped up to per-group capacity drops."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.core import fedspu
+from repro.models import model as tm
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduce_config(get_config("granite-moe-3b-a800m"))
+    flm = fedspu.bind_transformer(cfg)
+    key = jax.random.PRNGKey(0)
+    gp = tm.init_params(cfg, key)
+    C, steps, b, s = 3, 1, 2, 32
+    locals_ = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), gp)
+    keys = jax.random.split(key, C)
+    toks = jax.random.randint(key, (C, steps, b, s), 0, cfg.vocab_size)
+    batches = {"tokens": toks, "labels": toks}
+    p = jnp.asarray([0.4, 0.7, 1.0])
+    w = jnp.ones((C,))
+    return cfg, flm, gp, locals_, keys, batches, p, w
+
+
+@pytest.mark.parametrize("layout", ["vmap", "scan"])
+def test_compact_aggregation_identical(layout, setup):
+    cfg, flm, gp, locals_, keys, batches, p, w = setup
+    fn = fedspu.fl_round_vmap if layout == "vmap" else fedspu.fl_round_scan
+    g0, _, _, _ = jax.jit(lambda *a: fn(flm, *a, "fedspu", 0.01, compact=False))(gp, locals_, keys, p, batches, w)
+    g1, _, _, _ = jax.jit(lambda *a: fn(flm, *a, "fedspu", 0.01, compact=True))(gp, locals_, keys, p, batches, w)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=1e-6, atol=1e-7
+        )
+
+
+def test_remat_same_loss_and_grads(setup):
+    cfg, flm, gp, locals_, keys, batches, p, w = setup
+    cfg_r = cfg.replace(remat=True)
+    batch = {k: v[0, 0] for k, v in batches.items()}
+    l0 = float(tm.loss_fn(gp, cfg, batch))
+    l1 = float(tm.loss_fn(gp, cfg_r, batch))
+    assert l0 == pytest.approx(l1, rel=1e-6)
+    g0 = jax.grad(lambda q: tm.loss_fn(q, cfg, batch))(gp)
+    g1 = jax.grad(lambda q: tm.loss_fn(q, cfg_r, batch))(gp)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_grouped_moe_close_to_ungrouped(setup):
+    cfg, flm, gp, locals_, keys, batches, p, w = setup
+    batch = {k: v[0, 0] for k, v in batches.items()}
+    l0 = float(tm.loss_fn(gp, cfg, batch))
+    l2 = float(tm.loss_fn(gp, cfg.replace(moe_groups=2), batch))
+    # per-group capacity can drop different overflow tokens — small drift ok
+    assert abs(l0 - l2) < 0.1
+    assert np.isfinite(l2)
+
+
+def test_grouped_moe_rejects_nondivisible_silently(setup):
+    """moe_groups not dividing the token count falls back to 1 group."""
+    cfg, flm, gp, *_ = setup
+    cfg_g = cfg.replace(moe_groups=7)
+    toks = jnp.zeros((1, 31), jnp.int32)  # 31 tokens % 7 != 0
+    out = tm.forward(gp, cfg_g, {"tokens": toks})
+    assert np.isfinite(np.asarray(out, np.float32)).all()

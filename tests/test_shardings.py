@@ -1,0 +1,151 @@
+"""Distribution layer: PartitionSpec rules (on an AbstractMesh shaped
+like the production pod) + small-mesh lowering of the production step
+functions (the 256/512-chip meshes are exercised by launch/dryrun.py in
+its own process — XLA device-count flags are global)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import get_config, reduce_config
+from repro.launch import specs
+from repro.launch import shardings as sh
+from repro.launch.mesh import make_local_mesh
+
+
+def _axes(spec):
+    """Normalized view: per-dim axis (or None), trailing Nones stripped."""
+    out = list(spec)
+    while out and out[-1] is None:
+        out.pop()
+    return tuple(x if not (isinstance(x, tuple) and len(x) == 1) else x[0] for x in out)
+
+
+@pytest.fixture(scope="module")
+def pod():
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_local_mesh(1, 1)
+
+
+def test_param_spec_rules(pod):
+    cfg = get_config("internlm2-20b")
+    gp = specs.params_sds(cfg)
+    shard = sh.param_shardings(pod, gp)
+    assert _axes(shard["embed"].spec) == ("model",)  # vocab
+    blk = shard["stages"][0][0]
+    assert _axes(blk["attn"]["wq"].spec) == (None, None, "model")
+    assert _axes(blk["attn"]["wo"].spec) == (None, "model")
+    assert _axes(blk["attn"]["norm"].spec) == ()
+    assert _axes(blk["mlp"]["w_gate"].spec) == (None, None, "model")
+    assert _axes(blk["mlp"]["w_down"].spec) == (None, "model")
+
+
+def test_moe_expert_parallel_spec(pod):
+    cfg = get_config("kimi-k2-1t-a32b")
+    gp = specs.params_sds(cfg)
+    shard = sh.param_shardings(pod, gp)
+    moe = shard["stages"][0][0]["moe"]
+    assert _axes(moe["w_gate"].spec) == (None, "model")  # experts dim
+    assert _axes(moe["router"].spec) == ()
+
+
+def test_moe_fallback_when_experts_unshardable(pod):
+    """granite's 40 experts don't divide 16 — falls back to d_ff TP."""
+    cfg = get_config("granite-moe-3b-a800m")
+    gp = specs.params_sds(cfg)
+    shard = sh.param_shardings(pod, gp)
+    moe = shard["stages"][0][0]["moe"]
+    assert _axes(moe["w_gate"].spec) == (None, None, None, "model")
+    assert _axes(moe["w_down"].spec) == (None, None, "model")
+
+
+def test_vocab_not_divisible_replicated(pod):
+    cfg = get_config("mamba2-370m")  # vocab 50280 % 16 != 0
+    gp = specs.params_sds(cfg)
+    shard = sh.param_shardings(pod, gp)
+    assert _axes(shard["embed"].spec) == ()
+
+
+def test_mamba_param_specs(pod):
+    cfg = get_config("mamba2-370m")
+    gp = specs.params_sds(cfg)
+    shard = sh.param_shardings(pod, gp)
+    blk = shard["stages"][0][0]["mamba"]
+    assert _axes(blk["in_proj"].spec) == (None, None, "model")
+    assert _axes(blk["out_proj"].spec) == (None, "model")
+    assert _axes(blk["conv_w"].spec) == (None, None, "model")
+    assert _axes(blk["A_log"].spec) == ()
+
+
+def test_fsdp_shards_repeat_dim(pod):
+    cfg = get_config("qwen1.5-110b")
+    gp = specs.params_sds(cfg)
+    shard = sh.param_shardings(pod, gp, fsdp=True)
+    assert _axes(shard["stages"][0][0]["attn"]["wq"].spec) == ("data", None, "model")
+    # embeddings are not stage params: untouched by fsdp rule
+    assert _axes(shard["embed"].spec) == ("model",)
+
+
+def test_client_axes_leading_dim(pod):
+    cfg = get_config("internlm2-20b")
+    gp = specs.params_sds(cfg)
+    locals_ = specs.stack_sds(gp, 16)
+    shard = sh.param_shardings(pod, locals_, client_axes=("data",))
+    assert _axes(shard["stages"][0][0]["attn"]["wq"].spec)[0] == "data"
+    # non-divisible client count stays replicated on dim 0
+    locals3 = specs.stack_sds(gp, 3)
+    shard3 = sh.param_shardings(pod, locals3, client_axes=("data",))
+    assert _axes(shard3["embed"].spec) == (None, "model")
+
+
+def test_cache_specs(pod):
+    cfg = get_config("internlm2-20b")
+    caches = specs.caches_sds(cfg, 128, 32768)
+    cs = sh.cache_shardings(pod, caches, batch_axes=("data",), seq_axis="model")
+    k_spec = _axes(cs[0][0]["attn"]["k"].spec)
+    assert k_spec[1] == "data" and k_spec[2] == "model"
+
+
+def test_variant_long500k_swa():
+    cfg = get_config("qwen1.5-110b")
+    v = specs.variant_for_shape(cfg, "long_500k")
+    assert all(b.window == cfg.long_context_window for st in v.stages for b in st.pattern)
+    # natively sub-quadratic archs unchanged
+    for name in ("mamba2-370m", "jamba-v0.1-52b", "gemma3-4b"):
+        c = get_config(name)
+        assert specs.variant_for_shape(c, "long_500k") is c
+
+
+def test_cohort_layouts():
+    assert specs.cohort_layout(get_config("internlm2-20b")) == "vmap"
+    assert specs.cohort_layout(get_config("kimi-k2-1t-a32b")) == "scan"
+    assert specs.cohort_layout(get_config("qwen1.5-110b")) == "scan"
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("granite-moe-3b-a800m", "train_4k"),
+    ("mamba2-370m", "decode_32k"),
+    ("gemma3-4b", "long_500k"),
+])
+def test_build_step_lowers_on_local_mesh(arch, shape, mesh):
+    """Full-size configs lower (shape-level correctness) on a 1×1 mesh;
+    multi-device meshes are covered by launch/dryrun.py."""
+    cfg = get_config(arch)
+    built = specs.build_step(cfg, shape, mesh)
+    with mesh:
+        jax.jit(
+            built["fn"], in_shardings=built["in_shardings"], out_shardings=built["out_shardings"]
+        ).lower(*built["args"])
+
+
+def test_input_specs_shapes(mesh):
+    cfg = get_config("internvl2-76b")  # embeddings frontend (vlm carve-out)
+    args = specs.input_specs(cfg, "prefill_32k", mesh)
+    params, batch = args
+    assert "embeddings" in batch
+    assert batch["embeddings"].shape == (32, 32768, cfg.d_model)
