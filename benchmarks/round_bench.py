@@ -1,0 +1,192 @@
+"""Round-latency benchmark: seed naive round path vs the fused
+kernel-backed engine (docs/PERF.md), on the CPU oracle ("ref") path.
+
+Two cohorts:
+  cifar_cnn            — the paper's CIFAR CNN via the full FLServer round
+                         (engine + cohort gather/scatter + Eq. 6 test-loss
+                         eval), which is what a deployment pays per round.
+  transformer_reduced  — a reduced granite-MoE transformer cohort timed
+                         through the jitted round engine alone (the
+                         launch-layer hot path).
+
+Writes BENCH_round.json at the repo root:
+  {cohort: {seed_s_per_round, fused_s_per_round, speedup, max_abs_drift}}
+
+``max_abs_drift`` is the largest |Δ| between the two paths' global params
+after the timed rounds — the equivalence check riding along with the
+timing (tests/test_round_fused.py pins it tightly per method).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.configs import FLConfig, get_config, reduce_config
+from repro.core import fedspu
+from repro.core.server import FLServer
+from repro.data import partition, synthetic
+from repro.models import cnn
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_round.json")
+
+# seed path = every §Perf engine knob off (the pre-fusion round: vmap
+# cohort layout, naive aggregation, per-client Python eval loop, no
+# donation)
+SEED_FLAGS = dict(
+    kernel_mode="ref", fused_round=False, compact_agg=False,
+    donate_buffers=False, batched_eval=False, cohort_layout="vmap",
+)
+FUSED_FLAGS = dict(
+    kernel_mode="auto", fused_round=True, compact_agg=True,
+    donate_buffers=True, batched_eval=True, cohort_layout="auto",
+)
+
+
+def _drift(a, b) -> float:
+    return max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+# ---------------------------------------------------------------------------
+# CIFAR CNN cohort through the full server round
+# ---------------------------------------------------------------------------
+
+
+def _cnn_server(flags: dict, *, clients: int, cohort: int, steps: int, batch: int) -> FLServer:
+    cfg = cnn.CIFAR_CNN
+    fl = FLConfig(
+        n_clients=clients,
+        clients_per_round=cohort,
+        max_rounds=8,
+        lr=0.05,
+        batch_size=batch,
+        dirichlet_alpha=0.5,
+        method="fedspu",
+        seed=0,
+        **flags,
+    )
+    data = synthetic.make_classification_data(0, 80 * clients, cfg.in_shape, cfg.n_classes)
+    cd = partition.make_federated_dataset(0, data, clients, fl.dirichlet_alpha, fl.split_lambda)
+    return FLServer(
+        fedspu.bind_cnn(cfg),
+        init_fn=lambda key: cnn.init_params(cfg, key),
+        eval_fn=lambda p, b: cnn.accuracy(p, cfg, b),
+        client_data=cd,
+        fl=fl,
+        steps_per_round=steps,
+    )
+
+
+def _time_server_rounds(server: FLServer, rounds: int) -> float:
+    server.run_round(0)  # compile + warmup
+    jax.block_until_ready(server.global_params)
+    t0 = time.perf_counter()
+    for t in range(1, rounds + 1):
+        server.run_round(t)
+    jax.block_until_ready(server.global_params)
+    return (time.perf_counter() - t0) / rounds
+
+
+def bench_cnn(rounds: int = 3, *, clients: int = 16, cohort: int = 8, steps: int = 2, batch: int = 8) -> dict:
+    servers = {
+        name: _cnn_server(flags, clients=clients, cohort=cohort, steps=steps, batch=batch)
+        for name, flags in (("seed", SEED_FLAGS), ("fused", FUSED_FLAGS))
+    }
+    secs = {name: _time_server_rounds(s, rounds) for name, s in servers.items()}
+    return dict(
+        seed_s_per_round=secs["seed"],
+        fused_s_per_round=secs["fused"],
+        speedup=secs["seed"] / secs["fused"],
+        max_abs_drift=_drift(servers["seed"].global_params, servers["fused"].global_params),
+        config=dict(clients=clients, cohort=cohort, steps_per_round=steps, batch_size=batch, rounds_timed=rounds),
+    )
+
+
+# ---------------------------------------------------------------------------
+# reduced transformer cohort through the jitted round engine
+# ---------------------------------------------------------------------------
+
+
+def bench_transformer(rounds: int = 8, *, cohort: int = 4, steps: int = 2, batch: int = 2, seq: int = 64) -> dict:
+    cfg = reduce_config(get_config("granite-moe-3b-a800m"))
+    flm = fedspu.bind_transformer(cfg)
+    key = jax.random.PRNGKey(0)
+    from repro.models import model as tmodel
+
+    gp = tmodel.init_params(cfg, key)
+    locals_ = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (cohort,) + x.shape).copy(), gp)
+    keys = jax.random.split(key, cohort)
+    toks = jax.random.randint(key, (cohort, steps, batch, seq), 0, cfg.vocab_size)
+    batches = {"tokens": toks, "labels": toks}
+    p_ratios = jnp.linspace(0.3, 1.0, cohort)
+    weights = jnp.ones((cohort,))
+
+    def timed(round_fn, fn_kw: dict, donate: bool) -> tuple:
+        fn = jax.jit(
+            lambda g, l, k, pr, b, w: round_fn(
+                flm, g, l, k, pr, b, w, "fedspu", 0.01, **fn_kw
+            ),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        g, l = gp, locals_
+        g, l, _, _ = fn(g, l, keys, p_ratios, batches, weights)  # compile + warmup
+        jax.block_until_ready(g)
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            g, l, _, _ = fn(g, l, keys, p_ratios, batches, weights)
+        jax.block_until_ready(g)
+        return (time.perf_counter() - t0) / rounds, g
+
+    # seed = the vmap-layout naive engine; fused = the CPU-auto layout
+    # (scan) with kernel dispatch + compact aggregation + donation —
+    # mirroring what FLServer / launch pick on this backend.
+    seed_s, g_seed = timed(
+        fedspu.fl_round_vmap, dict(compact=False, fused=False, kernel_mode="ref"), donate=False
+    )
+    fused_engine = (
+        fedspu.fl_round_scan if jax.default_backend() == "cpu" else fedspu.fl_round_vmap
+    )
+    fused_s, g_fused = timed(
+        fused_engine, dict(compact=True, fused=True, kernel_mode="auto"), donate=True
+    )
+    return dict(
+        seed_s_per_round=seed_s,
+        fused_s_per_round=fused_s,
+        speedup=seed_s / fused_s,
+        max_abs_drift=_drift(g_seed, g_fused),
+        config=dict(arch=cfg.name, cohort=cohort, steps=steps, batch=batch, seq=seq, rounds_timed=rounds),
+    )
+
+
+# ---------------------------------------------------------------------------
+
+
+def run() -> dict:
+    results = {
+        "cifar_cnn": bench_cnn(),
+        "transformer_reduced": bench_transformer(),
+        "env": dict(backend=jax.default_backend(), devices=jax.device_count(), jax=jax.__version__),
+    }
+    rows = [
+        [k, f"{v['seed_s_per_round']*1e3:.0f}", f"{v['fused_s_per_round']*1e3:.0f}",
+         f"{v['speedup']:.2f}x", f"{v['max_abs_drift']:.2e}"]
+        for k, v in results.items()
+        if k != "env"
+    ]
+    print("\n== Round latency: seed naive vs fused kernel-backed path ==")
+    print(common.fmt_table(rows, ["cohort", "seed ms/round", "fused ms/round", "speedup", "max drift"]))
+    with open(OUT_PATH, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {os.path.normpath(OUT_PATH)}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

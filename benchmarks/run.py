@@ -14,6 +14,7 @@ from benchmarks import (
     fig5_jaccard,
     kernel_bench,
     roofline,
+    round_bench,
     table1_accuracy,
     table2_train_cost,
     table3_comm,
@@ -27,6 +28,7 @@ BENCHES = {
     "table4": lambda scale: table4_early_stop.run(scale),
     "fig5": lambda scale: fig5_jaccard.run(scale),
     "kernels": lambda scale: kernel_bench.run(),
+    "round": lambda scale: round_bench.run(),
     "roofline": lambda scale: roofline.run(),
 }
 

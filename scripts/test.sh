@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point: PYTHONPATH=src python -m pytest -x -q
+# Usage: scripts/test.sh [extra pytest args], e.g. scripts/test.sh -m "not slow"
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

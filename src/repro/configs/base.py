@@ -75,11 +75,15 @@ class ModelConfig:
     long_context_window: int = 4096  # SWA window used for long_500k on
     # pure full-attention archs (see DESIGN.md §7)
 
-    # §Perf optimization flags (beyond-paper; default off = faithful
-    # baseline). See EXPERIMENTS.md §Perf for the iteration log.
+    # §Perf optimization flags (see docs/PERF.md and EXPERIMENTS.md §Perf
+    # for the iteration log). The round-engine trio below defaults ON —
+    # equivalence with the seed naive path is pinned by
+    # tests/test_round_fused.py and tests/test_perf_flags.py.
     remat: bool = False  # activation-checkpoint each scanned block
     moe_groups: int = 0  # token-group MoE dispatch (0 = single group)
-    compact_agg: bool = False  # unit-granular den in Fig. 9 aggregation
+    compact_agg: bool = True  # unit-granular den in Fig. 9 aggregation
+    fused_round: bool = True  # kernel-backed single-select round engine
+    kernel_mode: str = "auto"  # auto|pallas|interpret|ref kernel dispatch
     attn_chunk: int = 1024  # query-chunk size of the XLA attention path
     # (the Pallas flash kernel replaces this path on real TPU)
     head_aligned_tp: bool = False  # replicate q/k/v/o when a model shard
@@ -200,6 +204,18 @@ class FLConfig:
     method: str = "fedspu"  # fedspu|fjord|fedmp|hermes|prunefl|random
     early_stopping: bool = False
     seed: int = 0
+
+    # §Perf engine knobs (docs/PERF.md). Defaults = the fused hot path;
+    # flip them off (and kernel_mode="ref", cohort_layout="vmap") for the
+    # seed naive path that benchmarks/round_bench.py uses as its baseline.
+    kernel_mode: str = "auto"  # auto|pallas|interpret|ref kernel dispatch
+    fused_round: bool = True  # single-select masked step + threaded masks
+    compact_agg: bool = True  # compact denominator in Fig. 9 aggregation
+    donate_buffers: bool = True  # donate round-fn args + cohort store scatter
+    batched_eval: bool = True  # single-call batched cohort test-loss / evaluate
+    cohort_layout: str = "auto"  # auto|vmap|scan round engine layout; auto =
+    # scan on CPU (XLA's client-batched conv lowering is pathological
+    # there), vmap on accelerators (clients ride the data mesh axes)
 
 
 def client_ratio(fl: FLConfig, client_id: int) -> float:

@@ -13,6 +13,14 @@ One federated round, fully jitted:
 Two cohort layouts (DESIGN.md §8): ``vmap`` (clients spatial, on the
 ``data`` mesh axis) and ``scan`` (clients sequential, params FSDP-sharded —
 used by the largest archs).
+
+§Perf (docs/PERF.md): the default ``fused=True`` path routes the masked
+SGD step and the aggregation through ``repro.kernels.ops`` (Pallas on
+TPU, fused-select XLA on CPU), threads the expanded mask trees from the
+local step straight into aggregation (no second expand sweep), and uses
+the compact denominator by default. ``fused=False`` + ``compact=False``
+reproduces the seed naive path bit-for-bit (the equivalence suite in
+tests/test_round_fused.py holds both paths together).
 """
 from __future__ import annotations
 
@@ -23,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import masks as M
+from repro.kernels import ops
 
 METHODS = ("fedspu", "random", "fjord", "fedmp", "hermes", "prunefl")
 
@@ -76,21 +85,43 @@ def sample_client_masks(flm: FLModel, global_params, key, p_ratio, method: str, 
     )
 
 
-def local_train(flm: FLModel, params, mask_tree, batches, lr):
-    """Masked SGD over ``batches`` (leading axis = steps). Eq. 4/5."""
+def local_train(flm: FLModel, params, mask_tree, batches, lr, *, fused: bool = True, kernel_mode: str = "auto"):
+    """Masked SGD over ``batches`` (leading axis = steps). Eq. 4/5.
 
-    def step(p, batch):
-        loss, grads = jax.value_and_grad(flm.loss_fn)(p, batch)
-        grads = M.mask_grads(grads, mask_tree)
-        p = jax.tree.map(lambda w, g: (w - lr * g.astype(jnp.float32)).astype(w.dtype), p, grads)
-        return p, loss
+    ``fused=True``: the frozen/active selection of each step is ONE
+    select (or, on the Pallas path, a row-block skip) via
+    ``ops.masked_update_tree`` — no param-shaped masked-grad temporary.
+    ``fused=False``: the seed two-pass path (mask_grads then a full
+    update sweep), kept as the equivalence baseline.
+    """
+
+    if fused:
+
+        def step(p, batch):
+            loss, grads = jax.value_and_grad(flm.loss_fn)(p, batch)
+            return ops.masked_update_tree(p, grads, mask_tree, lr, mode=kernel_mode), loss
+
+    else:
+
+        def step(p, batch):
+            loss, grads = jax.value_and_grad(flm.loss_fn)(p, batch)
+            grads = M.mask_grads(grads, mask_tree)
+            p = jax.tree.map(lambda w, g: (w - lr * g.astype(jnp.float32)).astype(w.dtype), p, grads)
+            return p, loss
 
     params, losses = jax.lax.scan(step, params, batches)
     return params, losses.mean()
 
 
-def client_round(flm: FLModel, global_params, local_params, key, p_ratio, batches, method: str, lr):
-    """One client's round. Returns (trained_params, unit_masks, train_loss)."""
+def _client_round(flm: FLModel, global_params, local_params, key, p_ratio, batches, method: str, lr, *, fused: bool = True, kernel_mode: str = "auto"):
+    """One client's round. Returns (trained, unit_masks, mask_tree, loss, frac).
+
+    The round-start merge (Fig. 8b) / prune is the single select that
+    produces the training start point; in fused mode the per-step
+    frozen/active selection is folded into the masked update, so the
+    merge select is the only standalone mask sweep of the client round
+    (XLA fuses it into the first forward's consumers).
+    """
     first_batch = jax.tree.map(lambda x: x[0], batches)
     unit_masks = sample_client_masks(flm, global_params, key, p_ratio, method, first_batch)
     mask_tree = normalize_mask_tree(global_params, flm.expand(global_params, unit_masks))
@@ -98,12 +129,23 @@ def client_round(flm: FLModel, global_params, local_params, key, p_ratio, batche
         start = M.merge_active(global_params, local_params, mask_tree)
     else:
         start = M.apply_param_mask(global_params, mask_tree)
-    trained, train_loss = local_train(flm, start, mask_tree, batches, lr)
+    trained, train_loss = local_train(
+        flm, start, mask_tree, batches, lr, fused=fused, kernel_mode=kernel_mode
+    )
     active_frac = M.mask_fraction(mask_tree, global_params)
+    return trained, unit_masks, mask_tree, train_loss, active_frac
+
+
+def client_round(flm: FLModel, global_params, local_params, key, p_ratio, batches, method: str, lr, *, fused: bool = True, kernel_mode: str = "auto"):
+    """One client's round. Returns (trained_params, unit_masks, train_loss)."""
+    trained, unit_masks, _, train_loss, active_frac = _client_round(
+        flm, global_params, local_params, key, p_ratio, batches, method, lr,
+        fused=fused, kernel_mode=kernel_mode,
+    )
     return trained, unit_masks, train_loss, active_frac
 
 
-def aggregate(flm: FLModel, global_params, trained_stacked, unit_masks_stacked, weights, compact: bool = False):
+def aggregate(flm: FLModel, global_params, trained_stacked, unit_masks_stacked, weights, compact: bool = False, *, mask_trees=None, kernel_mode: str = "ref"):
     """Fig. 9: per-parameter weighted average over the clients that held the
     parameter active; parameters nobody trained keep the old global value.
 
@@ -115,43 +157,40 @@ def aggregate(flm: FLModel, global_params, trained_stacked, unit_masks_stacked, 
     shape, and the mask is applied by select rather than a materialized
     f32 product — halves the aggregation all-reduce volume and removes a
     param-sized f32 temp per client.
+
+    ``mask_trees``: optional pre-expanded client-stacked compact mask
+    trees — the fused round path threads these through from the local
+    step, skipping the second expand sweep. ``kernel_mode``: kernel
+    dispatch for the sum ("ref" = the pure-jnp XLA path above; "pallas"/
+    "interpret"/"auto" route through the masked_aggregate kernel, whose
+    denominator is inherently compact).
     """
-    mask_trees = jax.vmap(
-        lambda p, um: normalize_mask_tree(p, flm.expand(p, um))
-    )(trained_stacked, unit_masks_stacked)
-
-    def agg_naive(g, pc, mc):
-        w = weights.reshape(weights.shape + (1,) * (pc.ndim - 1)).astype(jnp.float32)
-        mf = jnp.broadcast_to(mc, pc.shape).astype(jnp.float32)
-        num = jnp.sum(w * mf * pc.astype(jnp.float32), axis=0)
-        den = jnp.sum(w * mf, axis=0)
-        return jnp.where(den > 0, num / jnp.maximum(den, 1e-12), g.astype(jnp.float32)).astype(g.dtype)
-
-    def agg_compact(g, pc, mc):
-        wp = weights.reshape(weights.shape + (1,) * (pc.ndim - 1)).astype(jnp.float32)
-        wm = weights.reshape(weights.shape + (1,) * (mc.ndim - 1)).astype(jnp.float32)
-        num = jnp.sum(jnp.where(mc, wp * pc.astype(jnp.float32), 0.0), axis=0)
-        den = jnp.sum(wm * mc.astype(jnp.float32), axis=0)  # compact shape
-        return jnp.where(den > 0, num / jnp.maximum(den, 1e-12), g.astype(jnp.float32)).astype(g.dtype)
-
-    agg = agg_compact if compact else agg_naive
-    lg, treedef = jax.tree.flatten(global_params)
-    lp = treedef.flatten_up_to(trained_stacked)
-    lm = treedef.flatten_up_to(mask_trees)
-    return jax.tree.unflatten(treedef, [agg(g, p, m) for g, p, m in zip(lg, lp, lm)])
+    if mask_trees is None:
+        mask_trees = jax.vmap(
+            lambda p, um: normalize_mask_tree(p, flm.expand(p, um))
+        )(trained_stacked, unit_masks_stacked)
+    return ops.masked_aggregate_tree(
+        global_params, trained_stacked, mask_trees, weights, mode=kernel_mode, compact=compact
+    )
 
 
-def fl_round_vmap(flm: FLModel, global_params, locals_stacked, keys, p_ratios, batches, weights, method: str, lr, compact: bool = False):
+def fl_round_vmap(flm: FLModel, global_params, locals_stacked, keys, p_ratios, batches, weights, method: str, lr, compact: bool = True, *, fused: bool = True, kernel_mode: str = "auto"):
     """Cohort-parallel round (clients on the ``data`` mesh axis).
 
     locals_stacked: client-stacked param tree [C, ...]; keys [C,2]; p_ratios
     [C]; batches leaves [C, steps, ...]; weights [C].
     Returns (new_global, new_locals [C,...], train_losses [C]).
     """
-    trained, unit_masks, losses, fracs = jax.vmap(
-        lambda l, k, p, b: client_round(flm, global_params, l, k, p, b, method, lr)
+    trained, unit_masks, mask_trees, losses, fracs = jax.vmap(
+        lambda l, k, p, b: _client_round(
+            flm, global_params, l, k, p, b, method, lr, fused=fused, kernel_mode=kernel_mode
+        )
     )(locals_stacked, keys, p_ratios, batches)
-    new_global = aggregate(flm, global_params, trained, unit_masks, weights, compact=compact)
+    new_global = aggregate(
+        flm, global_params, trained, unit_masks, weights, compact=compact,
+        mask_trees=mask_trees if fused else None,
+        kernel_mode=kernel_mode if fused else "ref",
+    )
     return new_global, trained, losses, fracs
 
 
@@ -171,14 +210,17 @@ def _compact_mask_shapes(flm: FLModel, global_params):
     )
 
 
-def fl_round_scan(flm: FLModel, global_params, locals_stacked, keys, p_ratios, batches, weights, method: str, lr, compact: bool = False):
+def fl_round_scan(flm: FLModel, global_params, locals_stacked, keys, p_ratios, batches, weights, method: str, lr, compact: bool = True, *, fused: bool = True, kernel_mode: str = "auto"):
     """Sequential-cohort round: clients scanned one at a time so only one
     client's activations live at once; running masked sums implement the
     same aggregation. Used when per-client models are FSDP-sharded.
 
     ``compact=True`` (§Perf): the running denominator lives at the
     compact mask shape (per freezable unit) instead of a full f32
-    param-shaped tree."""
+    param-shaped tree. The aggregation itself stays a streaming jnp sum
+    (one client at a time — nothing for the batch kernel to batch over);
+    ``fused``/``kernel_mode`` route the local step through the kernel
+    dispatch and reuse the step's mask tree instead of re-expanding."""
 
     num0 = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), global_params)
     if compact:
@@ -191,8 +233,14 @@ def fl_round_scan(flm: FLModel, global_params, locals_stacked, keys, p_ratios, b
     def body(carry, xs):
         num, den = carry
         local_p, key, p_ratio, b, w = xs
-        trained, unit_masks, loss, frac = client_round(flm, global_params, local_p, key, p_ratio, b, method, lr)
-        mask_tree = normalize_mask_tree(trained, flm.expand(trained, unit_masks))
+        trained, unit_masks, step_masks, loss, frac = _client_round(
+            flm, global_params, local_p, key, p_ratio, b, method, lr,
+            fused=fused, kernel_mode=kernel_mode,
+        )
+        if fused:
+            mask_tree = step_masks
+        else:
+            mask_tree = normalize_mask_tree(trained, flm.expand(trained, unit_masks))
         if compact:
             num = M._tree3(
                 lambda n, t, m: n + jnp.where(m, w * t.astype(jnp.float32), 0.0),

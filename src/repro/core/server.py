@@ -74,11 +74,53 @@ class FLServer:
         self.param_bytes = param_bytes
         self.es_state = es.ESState.init(n)
         self.history = FLHistory()
+        # Donation (§Perf): the round fn may reuse the old global/cohort
+        # buffers for its outputs, and the cohort scatter updates the
+        # C-way stacked local-param store in place instead of copying it
+        # every round. Both inputs are dead after the call by construction
+        # (we reassign self.global_params / self.local_params).
+        layout = fl.cohort_layout
+        if layout == "auto":
+            layout = "scan" if jax.default_backend() == "cpu" else "vmap"
+        self.cohort_layout = layout
+        round_fn = fedspu.fl_round_scan if layout == "scan" else fedspu.fl_round_vmap
+        donate = (0, 1) if fl.donate_buffers else ()
         self._round_fn = jax.jit(
-            partial(fedspu.fl_round_vmap, self.flm, method=fl.method, lr=fl.lr)
+            partial(
+                round_fn,
+                self.flm,
+                method=fl.method,
+                lr=fl.lr,
+                compact=fl.compact_agg,
+                fused=fl.fused_round,
+                kernel_mode=fl.kernel_mode,
+            ),
+            donate_argnums=donate,
+        )
+        self._gather_fn = jax.jit(
+            lambda store, idx: jax.tree.map(lambda s: s[idx], store)
+        )
+        self._scatter_fn = jax.jit(
+            lambda store, idx, upd: jax.tree.map(
+                lambda s, u: s.at[idx].set(u), store, upd
+            ),
+            donate_argnums=(0,) if fl.donate_buffers else (),
         )
         self._loss_fn = jax.jit(self.flm.loss_fn)
         self._eval_fn = jax.jit(eval_fn)
+        # Batched eval (§Perf): one jitted call over a client chunk instead
+        # of a Python loop of per-client dispatches. On CPU the per-client
+        # map is a lax.map (sequential — keeps the fast single-model conv
+        # lowering and bounds activation memory); on accelerators a vmap
+        # (clients fill the device batch dim).
+        batched = (
+            (lambda f: jax.jit(lambda lp, tb: jax.lax.map(lambda args: f(*args), (lp, tb))))
+            if jax.default_backend() == "cpu"
+            else (lambda f: jax.jit(jax.vmap(f)))
+        )
+        self._batch_loss_fn = batched(self.flm.loss_fn)
+        self._batch_eval_fn = batched(eval_fn)
+        self._test_stack: Optional[Dict[str, np.ndarray]] = None
 
     # ------------------------------------------------------------------
     def _select(self) -> np.ndarray:
@@ -96,13 +138,41 @@ class FLServer:
         return jax.tree.map(lambda *xs: jnp.stack(xs), *per_client)
 
     TEST_N = 128  # fixed eval-batch size: one jit shape for every client
+    EVAL_CHUNK = 8  # clients per vmapped eval call (bounds activation mem)
 
-    def _test_batch(self, cid: int):
+    def _test_batch_np(self, cid: int) -> Dict[str, np.ndarray]:
         te = self.client_data[cid]["test"]
         n = len(next(iter(te.values())))
         rng = np.random.default_rng(10_000 + cid)
         idx = np.arange(n) if n == self.TEST_N else rng.choice(n, self.TEST_N, replace=n < self.TEST_N)
-        return {k: jnp.asarray(v[idx]) for k, v in te.items()}
+        return {k: v[idx] for k, v in te.items()}
+
+    def _test_batch(self, cid: int):
+        return {k: jnp.asarray(v) for k, v in self._test_batch_np(cid).items()}
+
+    def _test_stack_all(self) -> Dict[str, np.ndarray]:
+        """Client-stacked [N, TEST_N, ...] test batches (built once)."""
+        if self._test_stack is None:
+            per = [self._test_batch_np(c) for c in range(self.fl.n_clients)]
+            self._test_stack = {k: np.stack([p[k] for p in per]) for k in per[0]}
+        return self._test_stack
+
+    def _batched_over_clients(self, vfn, params_stacked, client_ids: np.ndarray) -> np.ndarray:
+        """Run a vmapped per-client fn in EVAL_CHUNK-sized client chunks.
+
+        params_stacked rows map 1:1 onto client_ids (row i = client
+        client_ids[i]); ragged tails are padded by clamping the index so
+        every chunk compiles to one shape.
+        """
+        stack = self._test_stack_all()
+        n = len(client_ids)
+        out = []
+        for s in range(0, n, self.EVAL_CHUNK):
+            rows = np.minimum(np.arange(s, s + self.EVAL_CHUNK), n - 1)
+            lp = jax.tree.map(lambda x: x[jnp.asarray(rows)], params_stacked)
+            tb = {k: jnp.asarray(v[client_ids[rows]]) for k, v in stack.items()}
+            out.append(np.asarray(vfn(lp, tb))[: min(self.EVAL_CHUNK, n - s)])
+        return np.concatenate(out)
 
     # ------------------------------------------------------------------
     def run_round(self, t: int) -> bool:
@@ -118,22 +188,26 @@ class FLServer:
             [len(self.client_data[c]["train"]["y" if "y" in self.client_data[c]["train"] else "labels"]) for c in cohort],
             jnp.float32,
         )
-        locals_c = jax.tree.map(lambda x: x[np.asarray(cohort)], self.local_params)
+        cohort_idx = jnp.asarray(np.asarray(cohort))
+        locals_c = self._gather_fn(self.local_params, cohort_idx)
 
         new_global, new_locals, train_losses, fracs = self._round_fn(
             self.global_params, locals_c, keys, p_ratios, batches, weights
         )
         self.global_params = new_global
-        self.local_params = jax.tree.map(
-            lambda store, upd: store.at[np.asarray(cohort)].set(upd), self.local_params, new_locals
-        )
+        self.local_params = self._scatter_fn(self.local_params, cohort_idx, new_locals)
         wall = time.perf_counter() - t0
 
         # Eq. 6 combined losses + ES bookkeeping
-        test_losses = []
-        for i, c in enumerate(cohort):
-            lp = jax.tree.map(lambda x: x[i], new_locals)
-            test_losses.append(float(self._loss_fn(lp, self._test_batch(int(c)))))
+        if self.fl.batched_eval:
+            test_losses = self._batched_over_clients(
+                self._batch_loss_fn, new_locals, np.asarray(cohort)
+            )
+        else:
+            test_losses = []
+            for i, c in enumerate(cohort):
+                lp = jax.tree.map(lambda x: x[i], new_locals)
+                test_losses.append(float(self._loss_fn(lp, self._test_batch(int(c)))))
         combined = es.combined_loss(
             np.asarray(train_losses, np.float64), np.asarray(test_losses, np.float64), self.fl.split_lambda
         )
@@ -162,6 +236,11 @@ class FLServer:
     def evaluate(self, max_clients: Optional[int] = None) -> float:
         """Mean personalized accuracy over clients' own test sets."""
         n = self.fl.n_clients if max_clients is None else min(max_clients, self.fl.n_clients)
+        if self.fl.batched_eval:
+            accs = self._batched_over_clients(
+                self._batch_eval_fn, self.local_params, np.arange(self.fl.n_clients)[:n]
+            )
+            return float(np.mean(accs))
         accs = []
         for c in range(n):
             lp = jax.tree.map(lambda x: x[c], self.local_params)

@@ -6,4 +6,8 @@
 #   ssd_scan          — Mamba-2 chunked SSD scan
 # Each kernel: <name>.py (pl.pallas_call + BlockSpec), oracle in ref.py,
 # jit'd public entry in ops.py (pads, picks pallas/interpret/ref path).
+# The round engine consumes the tree-level dispatchers
+# ops.masked_update_tree / ops.masked_aggregate_tree, which canonicalize
+# arbitrary compact mask layouts onto the kernels' row-masked 2-D view
+# (docs/PERF.md).
 from repro.kernels import ops, ref  # noqa: F401

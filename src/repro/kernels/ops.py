@@ -29,7 +29,12 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+MODES = ("auto", "pallas", "interpret", "ref")
+
+
 def _resolve(mode: str) -> str:
+    if mode not in MODES:
+        raise ValueError(f"unknown kernel mode {mode!r}; expected one of {MODES}")
     if mode == "auto":
         return "pallas" if _on_tpu() else "ref"
     return mode
@@ -134,6 +139,127 @@ def flash_attention(q, k, v, window: Optional[int] = None, mode: str = "auto"):
     # every real query position < s0 masks them out causally.
     out = fa_k.flash_attention(q2, k2, v2, window, interpret=(mode == "interpret"))
     return out[:, :, :sq]
+
+
+# ---------------------------------------------------------------------------
+# tree-level dispatch (the FedSPU round engine's hot path)
+#
+# Engine mask trees are *compact*: every leaf is a bool array broadcastable
+# to its parameter (each dim is 1 or the param dim), or python True. The
+# kernels want a 2-D row-masked view, so each leaf is canonicalized by
+# moving the mask-carrying axes to the front:
+#
+#   perm = (axes where mask dim > 1) + (axes where mask dim == 1)
+#   w2d  = w.transpose(perm).reshape(prod(masked dims), -1)
+#   rows = mask.transpose(perm).reshape(-1)
+#
+# On the "ref" path (CPU / XLA) no canonicalization happens at all — the
+# update/aggregate is a single fused broadcast-select per leaf, which is
+# what XLA fuses best; the transposes would only add copies.
+# ---------------------------------------------------------------------------
+
+
+def _split_mask_axes(mask_shape):
+    """(masked_axes, free_axes): dims where the compact mask has extent."""
+    masked = tuple(i for i, d in enumerate(mask_shape) if d > 1)
+    free = tuple(i for i, d in enumerate(mask_shape) if d == 1)
+    return masked, free
+
+
+def _inv_perm(perm):
+    inv = [0] * len(perm)
+    for i, a in enumerate(perm):
+        inv[a] = i
+    return tuple(inv)
+
+
+def _masked_update_leaf(w, g, m, lr, mode: str):
+    if m is True:
+        return (w.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(w.dtype)
+    masked, free = _split_mask_axes(m.shape)
+    if mode == "ref" or not masked:
+        # fused single-select step: frozen entries never touched (Eq. 4/5)
+        upd = (w.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(w.dtype)
+        return jnp.where(m, upd, w)
+    perm = masked + free
+    rows = m.transpose(perm).reshape(-1)
+    w2 = w.transpose(perm).reshape(rows.shape[0], -1)
+    g2 = g.transpose(perm).reshape(rows.shape[0], -1)
+    out = masked_update(w2, g2, rows, lr, mode=mode)
+    shp = tuple(w.shape[a] for a in perm)
+    return out.reshape(shp).transpose(_inv_perm(perm))
+
+
+def masked_update_tree(params, grads, mask_tree, lr, mode: str = "auto"):
+    """Masked SGD step over a whole param tree (Eq. 4/5).
+
+    mask_tree leaves: compact broadcastable bools or python True.
+    "ref" resolves to one fused select per leaf; "pallas"/"interpret"
+    canonicalize to the 2-D row-masked view and run the masked_update
+    kernel (frozen row-blocks skip the g-read and w-write entirely).
+    """
+    mode = _resolve(mode)
+    lp, treedef = jax.tree.flatten(params)
+    lg = treedef.flatten_up_to(grads)
+    lm = treedef.flatten_up_to(mask_tree)
+    return jax.tree.unflatten(
+        treedef, [_masked_update_leaf(w, g, m, lr, mode) for w, g, m in zip(lp, lg, lm)]
+    )
+
+
+def _agg_leaf_ref(g, pc, mc, weights, compact: bool):
+    """Pure-jnp Fig. 9 aggregation for one leaf (pc/mc have client axis 0)."""
+    if mc is True:
+        mc = jnp.ones((1,) * g.ndim, bool)
+    if compact:
+        wp = weights.reshape(weights.shape + (1,) * (pc.ndim - 1)).astype(jnp.float32)
+        wm = weights.reshape(weights.shape + (1,) * (mc.ndim - 1)).astype(jnp.float32)
+        num = jnp.sum(jnp.where(mc, wp * pc.astype(jnp.float32), 0.0), axis=0)
+        den = jnp.sum(wm * mc.astype(jnp.float32), axis=0)  # compact shape
+    else:
+        wp = weights.reshape(weights.shape + (1,) * (pc.ndim - 1)).astype(jnp.float32)
+        mf = jnp.broadcast_to(mc, pc.shape).astype(jnp.float32)
+        num = jnp.sum(wp * mf * pc.astype(jnp.float32), axis=0)
+        den = jnp.sum(wp * mf, axis=0)
+    return jnp.where(den > 0, num / jnp.maximum(den, 1e-12), g.astype(jnp.float32)).astype(g.dtype)
+
+
+def _masked_aggregate_leaf(g, pc, mc, weights, mode: str, compact: bool):
+    if mc is True:
+        return _agg_leaf_ref(g, pc, mc, weights, compact)
+    masked, free = _split_mask_axes(mc.shape[1:])  # dim 0 = clients
+    if mode == "ref" or not masked:
+        return _agg_leaf_ref(g, pc, mc, weights, compact)
+    perm = masked + free  # axes of g
+    rows = mc.transpose((0,) + tuple(a + 1 for a in perm)).reshape(mc.shape[0], -1)
+    pc2 = pc.transpose((0,) + tuple(a + 1 for a in perm)).reshape(
+        pc.shape[0], rows.shape[1], -1
+    )
+    g2 = g.transpose(perm).reshape(rows.shape[1], -1)
+    out = masked_aggregate(pc2, rows, weights, g2, mode=mode)
+    shp = tuple(g.shape[a] for a in perm)
+    return out.reshape(shp).transpose(_inv_perm(perm))
+
+
+def masked_aggregate_tree(global_params, trained_stacked, mask_trees, weights, mode: str = "auto", compact: bool = True):
+    """Fig. 9 aggregation over a whole param tree.
+
+    trained_stacked / mask_trees carry a leading client axis C; weights is
+    [C]. The kernel path accumulates the denominator at the row (unit)
+    granularity, which is inherently compact; the jnp path honours the
+    ``compact`` flag (False = the seed's param-shaped f32 denominator).
+    """
+    mode = _resolve(mode)
+    lg, treedef = jax.tree.flatten(global_params)
+    lp = treedef.flatten_up_to(trained_stacked)
+    lm = treedef.flatten_up_to(mask_trees)
+    return jax.tree.unflatten(
+        treedef,
+        [
+            _masked_aggregate_leaf(g, p, m, weights, mode, compact)
+            for g, p, m in zip(lg, lp, lm)
+        ],
+    )
 
 
 def ssd_scan(x, dt, A, B, C, chunk: int = ssd_k.CHUNK, mode: str = "auto"):

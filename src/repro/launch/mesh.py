@@ -11,17 +11,39 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: axis_types / AxisType only exist
+    on newer jax; 0.4.x takes (axis_shapes, axis_names) alone."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axes)
+
+
+def make_abstract_mesh(shape, axes):
+    """Device-free AbstractMesh for spec-level tests, across the
+    AbstractMesh signature change (0.4.x: ((name, size), ...);
+    newer: (sizes, names))."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return _make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / CPU smoke)."""
-    auto = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=auto)
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple:

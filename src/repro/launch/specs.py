@@ -127,6 +127,7 @@ def build_train(cfg: ModelConfig, mesh, global_batch: int, seq: int, method: str
         return round_fn(
             flm, global_params, locals_stacked, keys, p_ratios, batches, weights,
             method, lr, compact=cfg.compact_agg,
+            fused=cfg.fused_round, kernel_mode=cfg.kernel_mode,
         )
 
     gp = params_sds(cfg)

@@ -1,0 +1,72 @@
+"""Property-test adapter: real hypothesis when installed, deterministic
+sample-grid fallback otherwise.
+
+The tier-1 container does not ship ``hypothesis`` (it is pinned in
+requirements-dev.txt for dev boxes). Importing this module instead of
+hypothesis keeps the property tests collectable everywhere: with
+hypothesis present you get true shrinking property tests; without it,
+``given`` becomes a pytest.mark.parametrize over a fixed number of
+deterministic draws from the same strategy bounds.
+"""
+from __future__ import annotations
+
+try:
+    import hypothesis  # noqa: F401
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+    import pytest
+
+    N_EXAMPLES = 12  # draws per property in fallback mode
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class st:  # minimal mirror of the strategies the suite uses
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value, endpoint=True))
+            )
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    def given(**strategies):
+        names = sorted(strategies)
+        rng = np.random.default_rng(0xFED52025)
+        cases = [
+            tuple(strategies[n].draw(rng) for n in names) for _ in range(N_EXAMPLES)
+        ]
+        if len(names) == 1:
+            cases = [c[0] for c in cases]
+
+        def deco(fn):
+            return pytest.mark.parametrize(",".join(names), cases)(fn)
+
+        return deco
+
+    class settings:  # accepts-and-ignores stand-in for hypothesis.settings
+        def __init__(self, *args, **kwargs):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(*args, **kwargs):
+            pass
+
+        @staticmethod
+        def load_profile(*args, **kwargs):
+            pass

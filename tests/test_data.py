@@ -1,7 +1,6 @@
 """Data pipeline: Dirichlet non-iid partition + train/test split."""
-import hypothesis.strategies as st
 import numpy as np
-from hypothesis import given, settings
+from _prop import given, settings, st
 
 from repro.data import partition, synthetic
 

@@ -1,17 +1,15 @@
 """Property tests for the mask algebra (core/masks.py) — the heart of
 FedSPU's correctness."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _prop import given, settings, st
 
 from repro.core import masks as M
 
-hypothesis.settings.register_profile("ci", deadline=None, max_examples=30)
-hypothesis.settings.load_profile("ci")
+settings.register_profile("ci", deadline=None, max_examples=30)
+settings.load_profile("ci")
 
 
 @given(

@@ -1,0 +1,165 @@
+"""Fused hot-path equivalence: the kernel-backed + compact + fused-merge
+round engine must match the seed naive path across every METHOD and both
+cohort layouts, and the jitted round fn must actually donate its buffers
+(no doubled live copies of the cohort store)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FLConfig
+from repro.core import fedspu
+from repro.core.server import FLServer
+from repro.data import partition, synthetic
+from repro.kernels import ops
+from repro.models import cnn
+
+CFG = cnn.EMNIST_CNN  # small conv net: fast per-method sweeps
+
+
+@pytest.fixture(scope="module")
+def setup():
+    flm = fedspu.bind_cnn(CFG)
+    key = jax.random.PRNGKey(0)
+    gp = cnn.init_params(CFG, key)
+    C, steps, bs = 3, 2, 4
+    rng = np.random.default_rng(0)
+    locals_ = jax.tree.map(
+        lambda x: x[None] + 0.01 * jnp.asarray(rng.normal(size=(C,) + x.shape), x.dtype), gp
+    )
+    keys = jax.random.split(jax.random.PRNGKey(1), C)
+    batches = {
+        "x": jnp.asarray(rng.normal(size=(C, steps, bs, 28, 28, 1)), jnp.float32),
+        "y": jnp.asarray(rng.integers(0, CFG.n_classes, (C, steps, bs)), jnp.int32),
+    }
+    p = jnp.asarray([0.3, 0.6, 1.0])
+    weights = jnp.asarray(rng.random(C) + 0.5, jnp.float32)
+    return flm, gp, locals_, keys, p, batches, weights
+
+
+def _round(setup, method, layout, **kw):
+    flm, gp, locals_, keys, p, batches, weights = setup
+    fn = fedspu.fl_round_vmap if layout == "vmap" else fedspu.fl_round_scan
+    return jax.jit(
+        lambda g, l, k, pr, b, w: fn(flm, g, l, k, pr, b, w, method, 0.05, **kw)
+    )(gp, locals_, keys, p, batches, weights)
+
+
+def _assert_trees_close(a, b, **tol):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(
+            np.asarray(x, np.float32), np.asarray(y, np.float32), **tol
+        )
+
+
+@pytest.mark.parametrize("layout", ["vmap", "scan"])
+@pytest.mark.parametrize("method", fedspu.METHODS)
+def test_fused_matches_seed_naive(setup, method, layout):
+    """fused + compact + kernel dispatch ("ref" on CPU) == seed path."""
+    seed = _round(setup, method, layout, compact=False, fused=False)
+    fused = _round(setup, method, layout, compact=True, fused=True, kernel_mode="auto")
+    for s, f in zip(seed, fused):
+        _assert_trees_close(s, f, rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("layout", ["vmap", "scan"])
+def test_fused_interpret_kernels_match_seed(setup, layout):
+    """The Pallas kernel routing itself (interpret mode on CPU) matches
+    the seed path through the full round engine."""
+    seed = _round(setup, "fedspu", layout, compact=False, fused=False)
+    pallas = _round(setup, "fedspu", layout, compact=True, fused=True, kernel_mode="interpret")
+    for s, f in zip(seed, pallas):
+        _assert_trees_close(s, f, rtol=2e-5, atol=2e-6)
+
+
+def test_masked_update_tree_kernel_vs_ref():
+    """Tree dispatch canonicalizes arbitrary compact masks (row, column,
+    outer-product, scalar-True) onto the row-masked kernel view."""
+    rng = np.random.default_rng(7)
+    params = {
+        "w_row": jnp.asarray(rng.normal(size=(24, 10)), jnp.float32),
+        "w_col": jnp.asarray(rng.normal(size=(5, 5, 3, 16)), jnp.float32),
+        "w_outer": jnp.asarray(rng.normal(size=(48, 20)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(16,)), jnp.float32),
+        "norm": jnp.asarray(rng.normal(size=(8,)), jnp.float32),
+    }
+    grads = jax.tree.map(lambda x: jnp.asarray(rng.normal(size=x.shape), x.dtype), params)
+    mask = {
+        "w_row": jnp.asarray(rng.random((24, 1)) < 0.5),
+        "w_col": jnp.asarray(rng.random((1, 1, 1, 16)) < 0.5),
+        "w_outer": jnp.asarray(rng.random((48, 1)) < 0.5) & jnp.asarray(rng.random((1, 20)) < 0.7),
+        "b": jnp.asarray(rng.random(16) < 0.5),
+        "norm": True,
+    }
+    want = ops.masked_update_tree(params, grads, mask, 0.1, mode="ref")
+    got = ops.masked_update_tree(params, grads, mask, 0.1, mode="interpret")
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-6, atol=2e-7)
+
+
+def test_masked_aggregate_tree_kernel_vs_ref():
+    rng = np.random.default_rng(8)
+    C = 4
+    g = {"w": jnp.asarray(rng.normal(size=(12, 40)), jnp.float32),
+         "v": jnp.asarray(rng.normal(size=(6, 3, 10)), jnp.float32)}
+    pc = jax.tree.map(lambda x: jnp.asarray(rng.normal(size=(C,) + x.shape), x.dtype), g)
+    mc = {"w": jnp.asarray(rng.random((C, 12, 1)) < 0.5),
+          "v": jnp.asarray(rng.random((C, 1, 1, 10)) < 0.5)}
+    wts = jnp.asarray(rng.random(C) + 0.5, jnp.float32)
+    want = ops.masked_aggregate_tree(g, pc, mc, wts, mode="ref", compact=True)
+    got = ops.masked_aggregate_tree(g, pc, mc, wts, mode="interpret")
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# donation
+# ---------------------------------------------------------------------------
+
+
+def _server(donate: bool):
+    fl = FLConfig(
+        n_clients=5,
+        clients_per_round=3,
+        max_rounds=2,
+        lr=0.05,
+        batch_size=4,
+        dirichlet_alpha=0.5,
+        donate_buffers=donate,
+        seed=0,
+    )
+    data = synthetic.make_classification_data(0, 200, CFG.in_shape, CFG.n_classes)
+    cd = partition.make_federated_dataset(0, data, fl.n_clients, fl.dirichlet_alpha, fl.split_lambda)
+    return FLServer(
+        fedspu.bind_cnn(CFG),
+        init_fn=lambda key: cnn.init_params(CFG, key),
+        eval_fn=lambda p, b: cnn.accuracy(p, CFG, b),
+        client_data=cd,
+        fl=fl,
+        steps_per_round=2,
+    )
+
+
+def test_round_fn_donates_buffers():
+    """With donation on, the pre-round global params and cohort store are
+    consumed by the round (no doubled live buffers); the run stays
+    numerically identical to the non-donating server."""
+    s_d, s_n = _server(True), _server(False)
+    old_global_leaf = jax.tree.leaves(s_d.global_params)[0]
+    old_store_leaf = jax.tree.leaves(s_d.local_params)[0]
+    s_d.run_round(0)
+    s_n.run_round(0)
+    assert old_global_leaf.is_deleted(), "global params were not donated"
+    assert old_store_leaf.is_deleted(), "cohort store was not donated in the scatter"
+    _assert_trees_close(s_d.global_params, s_n.global_params, rtol=1e-6, atol=1e-7)
+    # and the server keeps working after donation (buffers not dangling)
+    s_d.run_round(1)
+    assert np.isfinite(s_d.history.records[-1].train_loss)
+
+
+def test_no_donation_keeps_inputs_alive():
+    s = _server(False)
+    old_store_leaf = jax.tree.leaves(s.local_params)[0]
+    s.run_round(0)
+    assert not old_store_leaf.is_deleted()
+    np.asarray(old_store_leaf)  # still readable

@@ -6,12 +6,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, reduce_config
 from repro.launch import specs
 from repro.launch import shardings as sh
-from repro.launch.mesh import make_local_mesh
+from repro.launch.mesh import make_abstract_mesh, make_local_mesh
 
 
 def _axes(spec):
@@ -24,7 +24,7 @@ def _axes(spec):
 
 @pytest.fixture(scope="module")
 def pod():
-    return AbstractMesh((16, 16), ("data", "model"))
+    return make_abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.fixture(scope="module")
@@ -127,6 +127,7 @@ def test_cohort_layouts():
     assert specs.cohort_layout(get_config("qwen1.5-110b")) == "scan"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch,shape", [
     ("granite-moe-3b-a800m", "train_4k"),
     ("mamba2-370m", "decode_32k"),
