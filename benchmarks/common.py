@@ -2,8 +2,10 @@
 
 Every paper-table benchmark runs the same experiment grid: synthetic
 non-iid data (Dirichlet α), the paper's CNN, 5-cluster p_k assignment,
-and a method ∈ {fedspu, fjord, fedmp, hermes, prunefl}. ``--full``
-approaches paper scale; the default is CI-sized.
+and a method from the strategy registry (fedspu, fjord, fedmp, hermes,
+prunefl, ...). Federations are built through the one
+``repro.launch.experiment`` entry point. ``--full`` approaches paper
+scale; the default is CI-sized.
 """
 from __future__ import annotations
 
@@ -13,18 +15,12 @@ from dataclasses import dataclass
 from typing import Dict, Optional
 
 from repro.configs import FLConfig
-from repro.core import fedspu
-from repro.core.server import FLServer
-from repro.data import partition, synthetic
-from repro.models import cnn
+from repro.core.federation import Federation
+from repro.launch import experiment
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
-DATASETS = {
-    "emnist": cnn.EMNIST_CNN,
-    "cifar": cnn.CIFAR_CNN,
-    "speech": cnn.SPEECH_CNN,
-}
+DATASETS = experiment.DATASETS
 
 
 @dataclass
@@ -45,8 +41,7 @@ QUICK = BenchScale()
 FULL = BenchScale(clients=50, rounds=120, samples=10000, steps_per_round=8)
 
 
-def make_server(dataset: str, method: str, alpha: float, scale: BenchScale, *, early_stopping=False, seed=0, max_rounds=None) -> FLServer:
-    cfg = DATASETS[dataset]
+def make_spec(dataset: str, method: str, alpha: float, scale: BenchScale, *, early_stopping=False, seed=0, max_rounds=None) -> experiment.ExperimentSpec:
     fl = FLConfig(
         n_clients=scale.clients,
         clients_per_round=min(10, scale.clients),
@@ -58,15 +53,21 @@ def make_server(dataset: str, method: str, alpha: float, scale: BenchScale, *, e
         early_stopping=early_stopping,
         seed=seed,
     )
-    data = synthetic.make_classification_data(seed, scale.samples, cfg.in_shape, cfg.n_classes)
-    cd = partition.make_federated_dataset(seed, data, fl.n_clients, alpha, fl.split_lambda)
-    return FLServer(
-        fedspu.bind_cnn(cfg),
-        init_fn=lambda key: cnn.init_params(cfg, key),
-        eval_fn=lambda p, b: cnn.accuracy(p, cfg, b),
-        client_data=cd,
+    return experiment.ExperimentSpec(
         fl=fl,
+        dataset=dataset,
+        samples=scale.samples,
         steps_per_round=scale.steps_per_round,
+    )
+
+
+def make_server(dataset: str, method: str, alpha: float, scale: BenchScale, *, early_stopping=False, seed=0, max_rounds=None) -> Federation:
+    """One benchmark federation (config → federation via experiment)."""
+    return experiment.build_federation(
+        make_spec(
+            dataset, method, alpha, scale,
+            early_stopping=early_stopping, seed=seed, max_rounds=max_rounds,
+        )
     )
 
 

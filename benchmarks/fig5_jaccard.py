@@ -13,11 +13,10 @@ iid-ish data they collapse to near-identical (J → 1).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core import fedspu, masks as M
+from repro.core import fedspu
 
 
 def _pairwise_jaccard(mask_list) -> float:

@@ -2,7 +2,8 @@
 kernel-backed engine (docs/PERF.md), on the CPU oracle ("ref") path.
 
 Two cohorts:
-  cifar_cnn            — the paper's CIFAR CNN via the full FLServer round
+  cifar_cnn            — the paper's CIFAR CNN via the full Federation
+                         round (built through repro.launch.experiment)
                          (engine + cohort gather/scatter + Eq. 6 test-loss
                          eval), which is what a deployment pays per round.
   transformer_reduced  — a reduced granite-MoE transformer cohort timed
@@ -28,8 +29,8 @@ import jax.numpy as jnp
 from benchmarks import common
 from repro.configs import FLConfig, get_config, reduce_config
 from repro.core import fedspu
-from repro.core.server import FLServer
-from repro.data import partition, synthetic
+from repro.core.federation import Federation
+from repro.launch import experiment
 from repro.models import cnn
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_round.json")
@@ -59,8 +60,7 @@ def _drift(a, b) -> float:
 # ---------------------------------------------------------------------------
 
 
-def _cnn_server(flags: dict, *, clients: int, cohort: int, steps: int, batch: int) -> FLServer:
-    cfg = cnn.CIFAR_CNN
+def _cnn_server(flags: dict, *, clients: int, cohort: int, steps: int, batch: int) -> Federation:
     fl = FLConfig(
         n_clients=clients,
         clients_per_round=cohort,
@@ -72,19 +72,13 @@ def _cnn_server(flags: dict, *, clients: int, cohort: int, steps: int, batch: in
         seed=0,
         **flags,
     )
-    data = synthetic.make_classification_data(0, 80 * clients, cfg.in_shape, cfg.n_classes)
-    cd = partition.make_federated_dataset(0, data, clients, fl.dirichlet_alpha, fl.split_lambda)
-    return FLServer(
-        fedspu.bind_cnn(cfg),
-        init_fn=lambda key: cnn.init_params(cfg, key),
-        eval_fn=lambda p, b: cnn.accuracy(p, cfg, b),
-        client_data=cd,
-        fl=fl,
-        steps_per_round=steps,
+    spec = experiment.ExperimentSpec(
+        fl=fl, dataset=cnn.CIFAR_CNN, samples=80 * clients, steps_per_round=steps
     )
+    return experiment.build_federation(spec)
 
 
-def _time_server_rounds(server: FLServer, rounds: int) -> float:
+def _time_server_rounds(server: Federation, rounds: int) -> float:
     server.run_round(0)  # compile + warmup
     jax.block_until_ready(server.global_params)
     t0 = time.perf_counter()
@@ -146,7 +140,7 @@ def bench_transformer(rounds: int = 8, *, cohort: int = 4, steps: int = 2, batch
 
     # seed = the vmap-layout naive engine; fused = the CPU-auto layout
     # (scan) with kernel dispatch + compact aggregation + donation —
-    # mirroring what FLServer / launch pick on this backend.
+    # mirroring what Federation / launch pick on this backend.
     seed_s, g_seed = timed(
         fedspu.fl_round_vmap, dict(compact=False, fused=False, kernel_mode="ref"), donate=False
     )

@@ -11,7 +11,6 @@ from __future__ import annotations
 import time
 
 import jax
-import numpy as np
 
 from benchmarks import common
 

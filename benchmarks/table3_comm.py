@@ -7,7 +7,6 @@ few percent of every dropout baseline.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common
 

@@ -3,41 +3,36 @@
 Trains the same non-iid federation with FedSPU and with each dropout
 baseline (FjORD global-ordered, Hermes l2-importance, FedMP l1,
 PruneFL grad-l2), same seeds and budgets, and prints the accuracy gap.
+Each run is one ``repro.launch.experiment`` invocation; the methods are
+resolved through the strategy registry, so a custom registered strategy
+slots straight into the sweep.
 
   PYTHONPATH=src python examples/compare_dropout.py [--rounds 25]
 """
 import argparse
 
 from repro.configs import FLConfig
-from repro.core import fedspu
-from repro.core.server import FLServer
-from repro.data import partition, synthetic
+from repro.launch import experiment
 from repro.models import cnn
 
 
 def train_one(method: str, rounds: int, seed: int = 0) -> float:
-    cfg = cnn.CIFAR_CNN
-    fl = FLConfig(
-        n_clients=12,
-        clients_per_round=6,
-        max_rounds=rounds,
-        lr=0.05,
-        batch_size=16,
-        dirichlet_alpha=0.1,
-        method=method,
-        seed=seed,
-    )
-    data = synthetic.make_classification_data(seed, 2000, cfg.in_shape, cfg.n_classes)
-    cd = partition.make_federated_dataset(seed, data, fl.n_clients, fl.dirichlet_alpha, fl.split_lambda)
-    server = FLServer(
-        fedspu.bind_cnn(cfg),
-        init_fn=lambda key: cnn.init_params(cfg, key),
-        eval_fn=lambda p, b: cnn.accuracy(p, cfg, b),
-        client_data=cd,
-        fl=fl,
+    spec = experiment.ExperimentSpec(
+        fl=FLConfig(
+            n_clients=12,
+            clients_per_round=6,
+            max_rounds=rounds,
+            lr=0.05,
+            batch_size=16,
+            dirichlet_alpha=0.1,
+            method=method,
+            seed=seed,
+        ),
+        dataset=cnn.CIFAR_CNN,
+        samples=2000,
         steps_per_round=4,
     )
-    return server.run().final_accuracy
+    return experiment.run(spec)["history"]["final_accuracy"]
 
 
 def main():

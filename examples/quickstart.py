@@ -1,57 +1,47 @@
-"""Quickstart: FedSPU in ~60 lines.
+"""Quickstart: FedSPU in ~50 lines.
 
 Runs the paper's Algorithm 1 on a synthetic non-iid EMNIST-like task
 with 8 heterogeneous clients (p_k from 0.2 to 1.0), prints the global
 round loss and the final mean personalized accuracy.
 
+Everything routes through the composable API: an ``ExperimentSpec``
+resolves to a ``Federation`` (strategy registry + task bundle) via
+``repro.launch.experiment``.
+
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-
 from repro.configs import FLConfig
-from repro.core import fedspu
-from repro.core.server import FLServer
-from repro.data import partition, synthetic
+from repro.launch import experiment
 from repro.models import cnn
 
 
 def main():
-    model_cfg = cnn.EMNIST_CNN
-
-    fl = FLConfig(
-        n_clients=8,
-        clients_per_round=4,
-        max_rounds=15,
-        lr=0.05,
-        batch_size=16,
-        dirichlet_alpha=0.1,  # strongly non-iid
-        method="fedspu",
-    )
-
-    # synthetic class-conditional data, Dirichlet-partitioned per client
-    data = synthetic.make_classification_data(0, 1500, model_cfg.in_shape, model_cfg.n_classes)
-    client_data = partition.make_federated_dataset(
-        seed=0, data=data, n_clients=fl.n_clients, alpha=fl.dirichlet_alpha, lam=fl.split_lambda
-    )
-
-    server = FLServer(
-        fedspu.bind_cnn(model_cfg),
-        init_fn=lambda key: cnn.init_params(model_cfg, key),
-        eval_fn=lambda p, b: cnn.accuracy(p, model_cfg, b),
-        client_data=client_data,
-        fl=fl,
+    spec = experiment.ExperimentSpec(
+        fl=FLConfig(
+            n_clients=8,
+            clients_per_round=4,
+            max_rounds=15,
+            lr=0.05,
+            batch_size=16,
+            dirichlet_alpha=0.1,  # strongly non-iid
+            method="fedspu",  # any name registered via repro.strategies
+        ),
+        dataset=cnn.EMNIST_CNN,
+        samples=1500,
         steps_per_round=4,
     )
+    fed = experiment.build_federation(spec)
 
+    fl = spec.fl
     print(f"FedSPU quickstart: {fl.n_clients} clients, p_k clusters {fl.p_clusters}")
     for t in range(fl.max_rounds):
-        server.run_round(t)
-        rec = server.history.records[-1]
+        fed.run_round(t)
+        rec = fed.history.records[-1]
         print(
             f"round {t:2d}  cohort={rec.participants}  train_loss={rec.train_loss:.4f}  "
             f"comm={rec.comm_gb*1e3:.1f} MB"
         )
-    acc = server.evaluate()
+    acc = fed.evaluate()
     print(f"\nfinal mean personalized accuracy: {acc:.3f}")
 
 

@@ -25,13 +25,14 @@ def main():
     prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32)
 
     print(f"serving {cfg.name}: batch={batch} prompt={prompt_len} gen={gen_len}")
-    out = generate(params, cfg, prompts, gen_len)
+    out, timing = generate(params, cfg, prompts, gen_len)
     for i in range(batch):
         print(f"req[{i}] -> {np.asarray(out[i]).tolist()}")
+    print(f"prefill {timing['prefill_s']*1e3:.0f} ms, decode {timing['decode_s']*1e3:.0f} ms")
 
     # per-request positions are tracked in the cache: verify decode is
     # deterministic given the same prompt
-    out2 = generate(params, cfg, prompts, gen_len)
+    out2, _ = generate(params, cfg, prompts, gen_len)
     assert (np.asarray(out) == np.asarray(out2)).all()
     print("deterministic decode: OK")
 

@@ -12,16 +12,10 @@ of DESIGN.md §3. Checkpoints every 50 rounds.
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-
 from repro import checkpoint as ckpt
-from repro.configs import FLConfig, get_config
+from repro.configs import FLConfig
 from repro.configs.base import BlockSpec, ModelConfig, Stage
-from repro.core import fedspu
-from repro.core.server import FLServer
-from repro.data import synthetic
-from repro.models import model as tmodel
+from repro.launch import experiment
 
 # ≈100M-param MoE LM of the granite family (8 layers, 8 experts top-2)
 LM_100M = ModelConfig(
@@ -68,27 +62,10 @@ def main():
         early_stopping=True,
     )
     seq = 128 if not args.tiny else 32
-    client_data = []
-    for cid in range(fl.n_clients):
-        corpus = synthetic.make_lm_corpus(cid, 48, seq, cfg.vocab_size, skew_id=cid)
-        cut = int(48 * fl.split_lambda)
-        client_data.append({
-            "train": {k: v[:cut] for k, v in corpus.items()},
-            "test": {k: v[cut:] for k, v in corpus.items()},
-        })
-
-    def eval_fn(params, batch):
-        logits = tmodel.forward(params, cfg, batch)
-        return (jnp.argmax(logits, -1) == batch["labels"]).mean()
-
-    server = FLServer(
-        fedspu.bind_transformer(cfg),
-        init_fn=lambda key: tmodel.init_params(cfg, key),
-        eval_fn=eval_fn,
-        client_data=client_data,
-        fl=fl,
-        steps_per_round=4,
+    spec = experiment.ExperimentSpec(
+        fl=fl, dataset=cfg, samples=48, seq_len=seq, steps_per_round=4
     )
+    server = experiment.build_federation(spec)
 
     t0 = time.perf_counter()
     for t in range(rounds):

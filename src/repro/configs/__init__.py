@@ -2,8 +2,6 @@
 input-shape registry re-export."""
 from __future__ import annotations
 
-import dataclasses
-
 from repro.configs.base import (  # noqa: F401
     INPUT_SHAPES,
     BlockSpec,

@@ -1,7 +1,7 @@
 # FedSPU — the paper's primary contribution: stochastic-parameter-update
-# personalized FL (masks, round engine, dropout baselines, early stopping,
-# server driver).
-from repro.core import early_stopping, fedspu, masks, server  # noqa: F401
+# personalized FL (masks, strategy-driven round engine, early stopping,
+# federation components, legacy server shim).
+from repro.core import early_stopping, fedspu, federation, masks, server  # noqa: F401
 from repro.core.fedspu import (  # noqa: F401
     METHODS,
     FLModel,
@@ -12,4 +12,15 @@ from repro.core.fedspu import (  # noqa: F401
     fl_round_scan,
     fl_round_vmap,
     local_train,
+)
+from repro.core.federation import (  # noqa: F401
+    CohortSampler,
+    CommMeter,
+    EarlyStoppingCallback,
+    EvalHarness,
+    Federation,
+    FederatedTask,
+    FLHistory,
+    RoundCallback,
+    RoundRecord,
 )

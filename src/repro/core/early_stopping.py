@@ -6,7 +6,7 @@ terminates when every client has stopped.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -1,0 +1,508 @@
+"""Composable federation: task bundle, components, and the Federation facade.
+
+The former 258-line ``FLServer.__init__`` entangled client sampling,
+eval, early stopping, communication accounting and engine construction.
+That monolith is decomposed here into small owned components around the
+jitted round engine (``repro.core.fedspu``):
+
+  FederatedTask   — what is being federated: model plumbing (FLModel),
+                    init/eval fns, data schema
+  CohortSampler   — who participates each round
+  EvalHarness     — Eq. 6 test losses + personalized accuracy (owns the
+                    TEST_N / EVAL_CHUNK batched-eval machinery, §Perf)
+  CommMeter       — per-round / cumulative communication accounting
+  RoundCallback   — pluggable per-round hooks; early stopping
+                    (``EarlyStoppingCallback``) is one of them
+  Federation      — the slim facade that wires the above to the engine
+
+Build one with ``Federation.from_config(fl, task, client_data)``; the
+legacy ``FLServer(flm, init_fn, eval_fn, ...)`` constructor survives as a
+deprecation shim in ``repro.core.server``. One level up,
+``repro.launch.experiment`` turns configs into federations and history
+JSON — examples and benchmarks route through it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig, client_ratio
+from repro.core import early_stopping as es
+from repro.core import fedspu
+from repro.data import schema, synthetic
+
+ClientData = List[Dict[str, Dict[str, np.ndarray]]]
+
+
+# ---------------------------------------------------------------------------
+# history
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RoundRecord:
+    round: int
+    participants: List[int]
+    train_loss: float
+    combined_loss: float
+    comm_gb: float
+    mean_accuracy: Optional[float] = None
+    wall_time_s: float = 0.0
+
+
+@dataclass
+class FLHistory:
+    records: List[RoundRecord] = field(default_factory=list)
+    final_accuracy: float = 0.0
+    rounds_run: int = 0
+    total_comm_gb: float = 0.0
+    total_train_time_s: float = 0.0
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-ready view (what ``repro.launch.experiment`` writes)."""
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# task bundle
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FederatedTask:
+    """What is being federated, independent of how rounds are run.
+
+    flm: engine plumbing (loss, unit counts, mask expansion, importance);
+    init_fn(key) -> params; eval_fn(params, batch) -> accuracy;
+    label_key: the client-split label key ("y" CNN track / "labels" LM
+    track — see ``repro.data.schema``; Federation validates the client
+    data against it at build time).
+    """
+
+    flm: fedspu.FLModel
+    init_fn: Callable[[Any], Any]
+    eval_fn: Callable[[Any, Any], Any]
+    label_key: str = "y"
+    name: str = ""
+
+    @classmethod
+    def from_cnn(cls, cfg) -> "FederatedTask":
+        """Paper CNN track (EMNIST / CIFAR / Speech configs)."""
+        from repro.models import cnn
+
+        return cls(
+            flm=fedspu.bind_cnn(cfg),
+            init_fn=lambda key: cnn.init_params(cfg, key),
+            eval_fn=lambda p, b: cnn.accuracy(p, cfg, b),
+            label_key="y",
+            name=cfg.name,
+        )
+
+    @classmethod
+    def from_transformer(cls, cfg) -> "FederatedTask":
+        """LM track: any assigned ModelConfig on token batches."""
+        from repro.models import model as tmodel
+
+        def eval_fn(params, batch):
+            logits = tmodel.forward(params, cfg, batch)
+            return (jnp.argmax(logits, -1) == batch["labels"]).mean()
+
+        return cls(
+            flm=fedspu.bind_transformer(cfg),
+            init_fn=lambda key: tmodel.init_params(cfg, key),
+            eval_fn=eval_fn,
+            label_key="labels",
+            name=cfg.name,
+        )
+
+
+# ---------------------------------------------------------------------------
+# components
+# ---------------------------------------------------------------------------
+
+
+class CohortSampler:
+    """Uniform without-replacement cohort selection from an active pool.
+
+    Shares the federation's numpy RNG so selection and minibatch sampling
+    consume one stream in a fixed order (seed-for-seed reproducibility
+    with the legacy server).
+    """
+
+    def __init__(self, fl: FLConfig, rng: np.random.Generator):
+        self.fl = fl
+        self.rng = rng
+
+    def select(self, pool: np.ndarray) -> np.ndarray:
+        k = min(self.fl.clients_per_round, len(pool))
+        return self.rng.choice(pool, size=k, replace=False)
+
+
+class CommMeter:
+    """FedSPU communication accounting: active fraction × model size,
+    up + down (×2), per round and cumulative."""
+
+    def __init__(self, n_params: int, param_bytes: int = 4):
+        self.n_params = n_params
+        self.param_bytes = param_bytes
+        self.total_gb = 0.0
+
+    def round_gb(self, active_fracs) -> float:
+        gb = float(
+            np.sum(np.asarray(active_fracs, np.float64))
+            * self.n_params
+            * self.param_bytes
+            * 2
+            / 1e9
+        )
+        self.total_gb += gb
+        return gb
+
+
+class EvalHarness:
+    """Personalized eval: Eq. 6 test losses for a cohort and mean
+    personalized accuracy over clients' own test sets.
+
+    Owns the §Perf batched-eval machinery: a fixed TEST_N eval batch per
+    client (one jit shape for every client) evaluated in EVAL_CHUNK-sized
+    vmapped/lax.map'd chunks, with the seed per-client Python loop kept
+    as the ``batched_eval=False`` fallback.
+    """
+
+    TEST_N = 128  # fixed eval-batch size: one jit shape for every client
+    EVAL_CHUNK = 8  # clients per vmapped eval call (bounds activation mem)
+
+    def __init__(self, task: FederatedTask, client_data: ClientData, fl: FLConfig):
+        self.client_data = client_data
+        self.fl = fl
+        self._loss_fn = jax.jit(task.flm.loss_fn)
+        self._eval_fn = jax.jit(task.eval_fn)
+        # Batched eval (§Perf): one jitted call over a client chunk instead
+        # of a Python loop of per-client dispatches. On CPU the per-client
+        # map is a lax.map (sequential — keeps the fast single-model conv
+        # lowering and bounds activation memory); on accelerators a vmap
+        # (clients fill the device batch dim).
+        batched = (
+            (lambda f: jax.jit(lambda lp, tb: jax.lax.map(lambda args: f(*args), (lp, tb))))
+            if jax.default_backend() == "cpu"
+            else (lambda f: jax.jit(jax.vmap(f)))
+        )
+        self._batch_loss_fn = batched(task.flm.loss_fn)
+        self._batch_eval_fn = batched(task.eval_fn)
+        self._test_stack: Optional[Dict[str, np.ndarray]] = None
+
+    # -- test batches ---------------------------------------------------
+    def test_batch_np(self, cid: int) -> Dict[str, np.ndarray]:
+        te = self.client_data[cid]["test"]
+        n = schema.num_examples(te)
+        rng = np.random.default_rng(10_000 + cid)
+        idx = np.arange(n) if n == self.TEST_N else rng.choice(n, self.TEST_N, replace=n < self.TEST_N)
+        return {k: v[idx] for k, v in te.items()}
+
+    def test_batch(self, cid: int):
+        return {k: jnp.asarray(v) for k, v in self.test_batch_np(cid).items()}
+
+    def _test_stack_all(self) -> Dict[str, np.ndarray]:
+        """Client-stacked [N, TEST_N, ...] test batches (built once)."""
+        if self._test_stack is None:
+            per = [self.test_batch_np(c) for c in range(self.fl.n_clients)]
+            self._test_stack = {k: np.stack([p[k] for p in per]) for k in per[0]}
+        return self._test_stack
+
+    def _batched_over_clients(self, vfn, params_stacked, client_ids: np.ndarray) -> np.ndarray:
+        """Run a vmapped per-client fn in EVAL_CHUNK-sized client chunks.
+
+        params_stacked rows map 1:1 onto client_ids (row i = client
+        client_ids[i]); ragged tails are padded by clamping the index so
+        every chunk compiles to one shape.
+        """
+        stack = self._test_stack_all()
+        n = len(client_ids)
+        out = []
+        for s in range(0, n, self.EVAL_CHUNK):
+            rows = np.minimum(np.arange(s, s + self.EVAL_CHUNK), n - 1)
+            lp = jax.tree.map(lambda x: x[jnp.asarray(rows)], params_stacked)
+            tb = {k: jnp.asarray(v[client_ids[rows]]) for k, v in stack.items()}
+            out.append(np.asarray(vfn(lp, tb))[: min(self.EVAL_CHUNK, n - s)])
+        return np.concatenate(out)
+
+    # -- public ---------------------------------------------------------
+    def cohort_test_losses(self, params_stacked, cohort: np.ndarray) -> np.ndarray:
+        """Per-client test loss on their own test set (Eq. 6's L_test)."""
+        if self.fl.batched_eval:
+            return self._batched_over_clients(self._batch_loss_fn, params_stacked, cohort)
+        losses = []
+        for i, c in enumerate(cohort):
+            lp = jax.tree.map(lambda x: x[i], params_stacked)
+            losses.append(float(self._loss_fn(lp, self.test_batch(int(c)))))
+        return np.asarray(losses)
+
+    def mean_accuracy(self, local_params, n_clients: int) -> float:
+        """Mean personalized accuracy over the first ``n_clients``."""
+        if self.fl.batched_eval:
+            accs = self._batched_over_clients(
+                self._batch_eval_fn, local_params, np.arange(self.fl.n_clients)[:n_clients]
+            )
+            return float(np.mean(accs))
+        accs = []
+        for c in range(n_clients):
+            lp = jax.tree.map(lambda x: x[c], local_params)
+            accs.append(float(self._eval_fn(lp, self.test_batch(c))))
+        return float(np.mean(accs))
+
+
+# ---------------------------------------------------------------------------
+# round callbacks
+# ---------------------------------------------------------------------------
+
+
+class RoundCallback:
+    """Pluggable per-round hook on the Federation facade.
+
+    should_terminate — checked at round start; any True ends the run
+    filter_pool      — narrows the candidate client pool before sampling
+    on_round_end     — observes (t, cohort, combined Eq. 6 losses)
+    """
+
+    def should_terminate(self, fed: "Federation") -> bool:
+        return False
+
+    def filter_pool(self, fed: "Federation", pool: np.ndarray) -> np.ndarray:
+        return pool
+
+    def on_round_end(self, fed: "Federation", t: int, cohort: np.ndarray, combined: np.ndarray) -> None:
+        pass
+
+
+class EarlyStoppingCallback(RoundCallback):
+    """Paper §3.2 / Algorithm 2 as a round callback: a client whose
+    combined loss L_t is non-decreasing stops and leaves the pool; the
+    run terminates when every client has stopped. ``ESState`` semantics
+    are identical to the former inline ``if fl.early_stopping`` branches.
+    """
+
+    def __init__(self, n_clients: int):
+        self.state = es.ESState.init(n_clients)
+
+    def should_terminate(self, fed: "Federation") -> bool:
+        return self.state.all_stopped
+
+    def filter_pool(self, fed: "Federation", pool: np.ndarray) -> np.ndarray:
+        return pool[~self.state.stopped[pool]]
+
+    def on_round_end(self, fed: "Federation", t: int, cohort: np.ndarray, combined: np.ndarray) -> None:
+        self.state = es.update(self.state, cohort, combined)
+
+
+# ---------------------------------------------------------------------------
+# facade
+# ---------------------------------------------------------------------------
+
+
+class Federation:
+    """Slim server facade: wires task + components to the jitted round
+    engine and keeps the run history. Prefer ``Federation.from_config``.
+    """
+
+    def __init__(
+        self,
+        task: FederatedTask,
+        client_data: ClientData,
+        fl: FLConfig,
+        *,
+        strategy=None,
+        steps_per_round: int = 10,
+        param_bytes: int = 4,
+        callbacks: Optional[Sequence[RoundCallback]] = None,
+    ):
+        # lazy: the strategies package imports repro.core.masks, so a
+        # module-level import here would cycle through repro.core.__init__
+        from repro.strategies import resolve_strategy
+
+        if client_data and schema.label_key(client_data[0]["train"]) != task.label_key:
+            raise ValueError(
+                f"task {task.name or task.label_key!r} expects label key "
+                f"{task.label_key!r} but the client data is keyed "
+                f"{schema.label_key(client_data[0]['train'])!r}"
+            )
+        self.task = task
+        self.fl = fl
+        self.client_data = client_data
+        self.steps_per_round = steps_per_round
+        self.strategy = resolve_strategy(strategy if strategy is not None else fl.method)
+        self.rng = np.random.default_rng(fl.seed)
+        key = jax.random.PRNGKey(fl.seed)
+        self.global_params = task.init_fn(key)
+        # every client starts from the broadcast initial model (Alg. 1 l.1)
+        n = fl.n_clients
+        self.local_params = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape).copy(), self.global_params
+        )
+        n_params = sum(x.size for x in jax.tree.leaves(self.global_params))
+        self.sampler = CohortSampler(fl, self.rng)
+        self.comm = CommMeter(n_params, param_bytes)
+        self.eval_harness = EvalHarness(task, client_data, fl)
+        if callbacks is None:
+            callbacks = [EarlyStoppingCallback(n)] if fl.early_stopping else []
+        self.callbacks: List[RoundCallback] = list(callbacks)
+        self._dormant_es = es.ESState.init(n)
+        self.history = FLHistory()
+        # Donation (§Perf): the round fn may reuse the old global/cohort
+        # buffers for its outputs, and the cohort scatter updates the
+        # C-way stacked local-param store in place instead of copying it
+        # every round. Both inputs are dead after the call by construction
+        # (we reassign self.global_params / self.local_params).
+        layout = fl.cohort_layout
+        if layout == "auto":
+            layout = "scan" if jax.default_backend() == "cpu" else "vmap"
+        self.cohort_layout = layout
+        round_fn = fedspu.fl_round_scan if layout == "scan" else fedspu.fl_round_vmap
+        donate = (0, 1) if fl.donate_buffers else ()
+        self._round_fn = jax.jit(
+            partial(
+                round_fn,
+                task.flm,
+                method=self.strategy,
+                lr=fl.lr,
+                compact=fl.compact_agg,
+                fused=fl.fused_round,
+                kernel_mode=fl.kernel_mode,
+            ),
+            donate_argnums=donate,
+        )
+        self._gather_fn = jax.jit(
+            lambda store, idx: jax.tree.map(lambda s: s[idx], store)
+        )
+        self._scatter_fn = jax.jit(
+            lambda store, idx, upd: jax.tree.map(
+                lambda s, u: s.at[idx].set(u), store, upd
+            ),
+            donate_argnums=(0,) if fl.donate_buffers else (),
+        )
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_config(
+        cls,
+        fl: FLConfig,
+        task: FederatedTask,
+        client_data: ClientData,
+        **kw,
+    ) -> "Federation":
+        """The builder: FLConfig + FederatedTask + client data -> a ready
+        federation. ``kw`` forwards to ``__init__`` (strategy,
+        steps_per_round, param_bytes, callbacks)."""
+        return cls(task, client_data, fl, **kw)
+
+    # -- component views ------------------------------------------------
+    @property
+    def flm(self) -> fedspu.FLModel:
+        return self.task.flm
+
+    @property
+    def es_state(self) -> es.ESState:
+        """The early-stopping state (dormant zero state when the
+        callback is not installed)."""
+        for cb in self.callbacks:
+            if isinstance(cb, EarlyStoppingCallback):
+                return cb.state
+        return self._dormant_es
+
+    @es_state.setter
+    def es_state(self, state: es.ESState) -> None:
+        for cb in self.callbacks:
+            if isinstance(cb, EarlyStoppingCallback):
+                cb.state = state
+                return
+        self._dormant_es = state
+
+    # ------------------------------------------------------------------
+    def _pool(self) -> np.ndarray:
+        pool = np.arange(self.fl.n_clients)
+        for cb in self.callbacks:
+            pool = cb.filter_pool(self, pool)
+        return pool
+
+    def _cohort_batches(self, cohort: np.ndarray):
+        per_client = [
+            synthetic.sample_batches(
+                self.rng, self.client_data[c]["train"], self.steps_per_round, self.fl.batch_size
+            )
+            for c in cohort
+        ]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per_client)
+
+    def _test_batch(self, cid: int):
+        return self.eval_harness.test_batch(cid)
+
+    # ------------------------------------------------------------------
+    def run_round(self, t: int) -> bool:
+        """One round; returns False when FL terminated (e.g. every client
+        early-stopped)."""
+        if any(cb.should_terminate(self) for cb in self.callbacks):
+            return False
+        cohort = self.sampler.select(self._pool())
+        t0 = time.perf_counter()
+        keys = jax.random.split(jax.random.fold_in(jax.random.PRNGKey(self.fl.seed), t), len(cohort))
+        p_ratios = jnp.array([client_ratio(self.fl, int(c)) for c in cohort], jnp.float32)
+        batches = self._cohort_batches(cohort)
+        weights = jnp.array(
+            [schema.num_examples(self.client_data[c]["train"]) for c in cohort],
+            jnp.float32,
+        )
+        cohort_idx = jnp.asarray(np.asarray(cohort))
+        locals_c = self._gather_fn(self.local_params, cohort_idx)
+
+        new_global, new_locals, train_losses, fracs = self._round_fn(
+            self.global_params, locals_c, keys, p_ratios, batches, weights
+        )
+        self.global_params = new_global
+        self.local_params = self._scatter_fn(self.local_params, cohort_idx, new_locals)
+        wall = time.perf_counter() - t0
+
+        # Eq. 6 combined losses + callback bookkeeping (ES et al.)
+        test_losses = self.eval_harness.cohort_test_losses(new_locals, np.asarray(cohort))
+        combined = es.combined_loss(
+            np.asarray(train_losses, np.float64), np.asarray(test_losses, np.float64), self.fl.split_lambda
+        )
+        for cb in self.callbacks:
+            cb.on_round_end(self, t, cohort, combined)
+
+        comm_gb = self.comm.round_gb(fracs)
+        self.history.records.append(
+            RoundRecord(
+                round=t,
+                participants=[int(c) for c in cohort],
+                train_loss=float(np.mean(np.asarray(train_losses))),
+                combined_loss=float(np.mean(combined)),
+                comm_gb=comm_gb,
+                wall_time_s=wall,
+            )
+        )
+        self.history.total_comm_gb = self.comm.total_gb  # meter owns the total
+        self.history.total_train_time_s += wall
+        self.history.rounds_run = t + 1
+        return True
+
+    # ------------------------------------------------------------------
+    def evaluate(self, max_clients: Optional[int] = None) -> float:
+        """Mean personalized accuracy over clients' own test sets."""
+        n = self.fl.n_clients if max_clients is None else min(max_clients, self.fl.n_clients)
+        return self.eval_harness.mean_accuracy(self.local_params, n)
+
+    def run(self, rounds: Optional[int] = None, eval_every: int = 0) -> FLHistory:
+        rounds = self.fl.max_rounds if rounds is None else rounds
+        for t in range(rounds):
+            if not self.run_round(t):
+                break
+            if eval_every and (t + 1) % eval_every == 0:
+                self.history.records[-1].mean_accuracy = self.evaluate(max_clients=20)
+        self.history.final_accuracy = self.evaluate()
+        return self.history

@@ -1,14 +1,20 @@
-"""FedSPU round engine (Algorithm 1/2) + federated-dropout baselines.
+"""Strategy-agnostic federated round engine (Algorithm 1/2).
 
 One federated round, fully jitted:
 
-  1. per-client unit masks from p_k    (server-side sampling, Fig. 8a ①)
-  2. merge: active <- global, frozen <- personal   (FedSPU)
+  1. per-client unit masks from p_k    (strategy ``sample_masks`` hook)
+  2. merge: active <- global, frozen <- personal   (FedSPU ``merge``)
      or prune: inactive params zeroed              (dropout baselines)
   3. local SGD with masked gradients (Eq. 4/5), ``local_steps`` minibatches
-  4. masked weighted aggregation (Fig. 9) — a sum over the client axis,
-     which on the pod lowers to the all-reduce that is FedSPU's
-     communication signature.
+  4. masked weighted aggregation (Fig. 9, strategy ``aggregate`` hook) —
+     a sum over the client axis, which on the pod lowers to the
+     all-reduce that is FedSPU's communication signature.
+
+What varies between schemes (FedSPU, federated dropout, FjORD,
+importance pruning, ...) lives in ``repro.strategies``; every ``method``
+argument below accepts a registered strategy name or a Strategy
+instance, resolved once per trace and closed over as static callables —
+adding a scheme never edits this engine.
 
 Two cohort layouts (DESIGN.md §8): ``vmap`` (clients spatial, on the
 ``data`` mesh axis) and ``scan`` (clients sequential, params FSDP-sharded —
@@ -33,7 +39,19 @@ import jax.numpy as jnp
 from repro.core import masks as M
 from repro.kernels import ops
 
+# The six builtin strategies (see repro.strategies). The registry — not
+# this tuple — is the extension surface: ``method`` arguments below accept
+# any registered name or Strategy instance.
 METHODS = ("fedspu", "random", "fjord", "fedmp", "hermes", "prunefl")
+
+
+def _resolve(method):
+    """Registry name or Strategy instance -> Strategy (lazy import: the
+    strategies package imports repro.core.masks, so importing it at
+    module level here would cycle through repro.core.__init__)."""
+    from repro.strategies import resolve_strategy
+
+    return resolve_strategy(method)
 
 
 @dataclass(frozen=True)
@@ -47,42 +65,15 @@ class FLModel:
     importance: Optional[Callable[[Any, int], Any]] = None  # (tree, ord) -> scores
 
 
-def normalize_mask_tree(params, mask_tree):
-    """Replace python-True leaves with broadcastable scalar bool arrays
-    shaped (1,)*ndim so the tree is vmap/stack friendly."""
-    lp, treedef = jax.tree.flatten(params)
-    lm = treedef.flatten_up_to(mask_tree)
-    out = [
-        jnp.ones((1,) * p.ndim, bool) if m is True else m for p, m in zip(lp, lm)
-    ]
-    return jax.tree.unflatten(treedef, out)
+# re-exported from masks (it moved there so the strategies package can
+# use it without importing this module)
+normalize_mask_tree = M.normalize_mask_tree
 
 
-def sample_client_masks(flm: FLModel, global_params, key, p_ratio, method: str, batch=None):
-    """Unit masks for one client according to ``method``."""
-    if method in ("fedspu", "random"):
-        return M.sample_unit_masks(
-            key, flm.unit_counts, p_ratio, repeats_shapes=flm.repeats_shapes, method="random"
-        )
-    if method == "fjord":
-        return M.sample_unit_masks(
-            key, flm.unit_counts, p_ratio, repeats_shapes=flm.repeats_shapes, method="ordered"
-        )
-    if method in ("fedmp", "hermes"):
-        scores = flm.importance(global_params, 1 if method == "fedmp" else 2)
-    elif method == "prunefl":
-        grads = jax.grad(flm.loss_fn)(global_params, batch)
-        scores = flm.importance(grads, 2)
-    else:
-        raise ValueError(f"unknown method {method!r}")
-    return M.sample_unit_masks(
-        key,
-        flm.unit_counts,
-        p_ratio,
-        repeats_shapes=flm.repeats_shapes,
-        scores_tree=scores,
-        method="importance",
-    )
+def sample_client_masks(flm: FLModel, global_params, key, p_ratio, method, batch=None):
+    """Unit masks for one client according to ``method`` (a registered
+    strategy name or a Strategy instance)."""
+    return _resolve(method).sample_masks(flm, global_params, key, p_ratio, batch)
 
 
 def local_train(flm: FLModel, params, mask_tree, batches, lr, *, fused: bool = True, kernel_mode: str = "auto"):
@@ -113,22 +104,20 @@ def local_train(flm: FLModel, params, mask_tree, batches, lr, *, fused: bool = T
     return params, losses.mean()
 
 
-def _client_round(flm: FLModel, global_params, local_params, key, p_ratio, batches, method: str, lr, *, fused: bool = True, kernel_mode: str = "auto"):
+def _client_round(flm: FLModel, global_params, local_params, key, p_ratio, batches, method, lr, *, fused: bool = True, kernel_mode: str = "auto"):
     """One client's round. Returns (trained, unit_masks, mask_tree, loss, frac).
 
-    The round-start merge (Fig. 8b) / prune is the single select that
-    produces the training start point; in fused mode the per-step
-    frozen/active selection is folded into the masked update, so the
-    merge select is the only standalone mask sweep of the client round
-    (XLA fuses it into the first forward's consumers).
+    The strategy's round-start merge (Fig. 8b) / prune is the single
+    select that produces the training start point; in fused mode the
+    per-step frozen/active selection is folded into the masked update, so
+    the merge select is the only standalone mask sweep of the client
+    round (XLA fuses it into the first forward's consumers).
     """
+    strat = _resolve(method)
     first_batch = jax.tree.map(lambda x: x[0], batches)
-    unit_masks = sample_client_masks(flm, global_params, key, p_ratio, method, first_batch)
+    unit_masks = strat.sample_masks(flm, global_params, key, p_ratio, first_batch)
     mask_tree = normalize_mask_tree(global_params, flm.expand(global_params, unit_masks))
-    if method == "fedspu":
-        start = M.merge_active(global_params, local_params, mask_tree)
-    else:
-        start = M.apply_param_mask(global_params, mask_tree)
+    start = strat.merge(flm, global_params, local_params, mask_tree)
     trained, train_loss = local_train(
         flm, start, mask_tree, batches, lr, fused=fused, kernel_mode=kernel_mode
     )
@@ -136,7 +125,7 @@ def _client_round(flm: FLModel, global_params, local_params, key, p_ratio, batch
     return trained, unit_masks, mask_tree, train_loss, active_frac
 
 
-def client_round(flm: FLModel, global_params, local_params, key, p_ratio, batches, method: str, lr, *, fused: bool = True, kernel_mode: str = "auto"):
+def client_round(flm: FLModel, global_params, local_params, key, p_ratio, batches, method, lr, *, fused: bool = True, kernel_mode: str = "auto"):
     """One client's round. Returns (trained_params, unit_masks, train_loss)."""
     trained, unit_masks, _, train_loss, active_frac = _client_round(
         flm, global_params, local_params, key, p_ratio, batches, method, lr,
@@ -145,48 +134,30 @@ def client_round(flm: FLModel, global_params, local_params, key, p_ratio, batche
     return trained, unit_masks, train_loss, active_frac
 
 
-def aggregate(flm: FLModel, global_params, trained_stacked, unit_masks_stacked, weights, compact: bool = False, *, mask_trees=None, kernel_mode: str = "ref"):
-    """Fig. 9: per-parameter weighted average over the clients that held the
-    parameter active; parameters nobody trained keep the old global value.
-
-    trained_stacked / unit_masks_stacked have a leading client axis C;
-    ``weights`` is [C] (n_k, zero to drop a client e.g. after early stop).
-
-    ``compact=True`` (§Perf): the denominator is accumulated at the
-    compact (broadcastable) mask shape instead of the full parameter
-    shape, and the mask is applied by select rather than a materialized
-    f32 product — halves the aggregation all-reduce volume and removes a
-    param-sized f32 temp per client.
-
-    ``mask_trees``: optional pre-expanded client-stacked compact mask
-    trees — the fused round path threads these through from the local
-    step, skipping the second expand sweep. ``kernel_mode``: kernel
-    dispatch for the sum ("ref" = the pure-jnp XLA path above; "pallas"/
-    "interpret"/"auto" route through the masked_aggregate kernel, whose
-    denominator is inherently compact).
-    """
-    if mask_trees is None:
-        mask_trees = jax.vmap(
-            lambda p, um: normalize_mask_tree(p, flm.expand(p, um))
-        )(trained_stacked, unit_masks_stacked)
-    return ops.masked_aggregate_tree(
-        global_params, trained_stacked, mask_trees, weights, mode=kernel_mode, compact=compact
+def aggregate(flm: FLModel, global_params, trained_stacked, unit_masks_stacked, weights, compact: bool = False, *, mask_trees=None, kernel_mode: str = "ref", method="fedspu"):
+    """Fig. 9 masked weighted aggregation, routed through the strategy's
+    ``aggregate`` hook (every builtin uses the shared default — see
+    ``repro.strategies.default_aggregate`` for the knob semantics)."""
+    return _resolve(method).aggregate(
+        flm, global_params, trained_stacked, unit_masks_stacked, weights,
+        compact=compact, mask_trees=mask_trees, kernel_mode=kernel_mode,
     )
 
 
-def fl_round_vmap(flm: FLModel, global_params, locals_stacked, keys, p_ratios, batches, weights, method: str, lr, compact: bool = True, *, fused: bool = True, kernel_mode: str = "auto"):
+def fl_round_vmap(flm: FLModel, global_params, locals_stacked, keys, p_ratios, batches, weights, method, lr, compact: bool = True, *, fused: bool = True, kernel_mode: str = "auto"):
     """Cohort-parallel round (clients on the ``data`` mesh axis).
 
     locals_stacked: client-stacked param tree [C, ...]; keys [C,2]; p_ratios
     [C]; batches leaves [C, steps, ...]; weights [C].
     Returns (new_global, new_locals [C,...], train_losses [C]).
     """
+    strat = _resolve(method)
     trained, unit_masks, mask_trees, losses, fracs = jax.vmap(
         lambda l, k, p, b: _client_round(
-            flm, global_params, l, k, p, b, method, lr, fused=fused, kernel_mode=kernel_mode
+            flm, global_params, l, k, p, b, strat, lr, fused=fused, kernel_mode=kernel_mode
         )
     )(locals_stacked, keys, p_ratios, batches)
-    new_global = aggregate(
+    new_global = strat.aggregate(
         flm, global_params, trained, unit_masks, weights, compact=compact,
         mask_trees=mask_trees if fused else None,
         kernel_mode=kernel_mode if fused else "ref",
@@ -210,7 +181,7 @@ def _compact_mask_shapes(flm: FLModel, global_params):
     )
 
 
-def fl_round_scan(flm: FLModel, global_params, locals_stacked, keys, p_ratios, batches, weights, method: str, lr, compact: bool = True, *, fused: bool = True, kernel_mode: str = "auto"):
+def fl_round_scan(flm: FLModel, global_params, locals_stacked, keys, p_ratios, batches, weights, method, lr, compact: bool = True, *, fused: bool = True, kernel_mode: str = "auto"):
     """Sequential-cohort round: clients scanned one at a time so only one
     client's activations live at once; running masked sums implement the
     same aggregation. Used when per-client models are FSDP-sharded.
@@ -222,6 +193,7 @@ def fl_round_scan(flm: FLModel, global_params, locals_stacked, keys, p_ratios, b
     ``fused``/``kernel_mode`` route the local step through the kernel
     dispatch and reuse the step's mask tree instead of re-expanding."""
 
+    strat = _resolve(method)
     num0 = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), global_params)
     if compact:
         den0 = jax.tree.map(
@@ -234,7 +206,7 @@ def fl_round_scan(flm: FLModel, global_params, locals_stacked, keys, p_ratios, b
         num, den = carry
         local_p, key, p_ratio, b, w = xs
         trained, unit_masks, step_masks, loss, frac = _client_round(
-            flm, global_params, local_p, key, p_ratio, b, method, lr,
+            flm, global_params, local_p, key, p_ratio, b, strat, lr,
             fused=fused, kernel_mode=kernel_mode,
         )
         if fused:

@@ -91,6 +91,17 @@ def sample_unit_masks(key, unit_counts, p, *, repeats_shapes=None, scores_tree=N
 # ---------------------------------------------------------------------------
 
 
+def normalize_mask_tree(params, mask_tree):
+    """Replace python-True leaves with broadcastable scalar bool arrays
+    shaped (1,)*ndim so the tree is vmap/stack friendly."""
+    lp, treedef = jax.tree.flatten(params)
+    lm = treedef.flatten_up_to(mask_tree)
+    out = [
+        jnp.ones((1,) * p.ndim, bool) if m is True else m for p, m in zip(lp, lm)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
 def merge_active(global_params, local_params, mask_tree):
     """FedSPU merge (Fig. 8b): active <- global, frozen <- local."""
     return _tree3(

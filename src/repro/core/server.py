@@ -1,50 +1,47 @@
-"""Federated server driver (paper-faithful track, Algorithm 1/2).
+"""Legacy federated-server entry point (deprecation shim).
 
-Python-level orchestration (client selection, early-stopping bookkeeping,
-communication accounting) around the jitted round engine in fedspu.py.
+The ``FLServer`` monolith was decomposed into ``repro.core.federation``
+(FederatedTask / CohortSampler / EvalHarness / CommMeter / round
+callbacks around a slim ``Federation`` facade). This module keeps the
+old constructor signature working:
+
+    FLServer(flm, init_fn, eval_fn, client_data, fl, ...)   # deprecated
+
+is exactly
+
+    task = FederatedTask(flm=flm, init_fn=init_fn, eval_fn=eval_fn)
+    Federation.from_config(fl, task, client_data, ...)
+
+and every attribute the old class exposed (``global_params``,
+``local_params``, ``history``, ``es_state``, ``run_round`` /
+``evaluate`` / ``run``) lives on ``Federation`` unchanged.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, Dict, List, Optional
+import warnings
+from typing import Dict, List
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import FLConfig, client_ratio
-from repro.core import early_stopping as es
+from repro.configs.base import FLConfig
 from repro.core import fedspu
-from repro.data import synthetic
+# legacy import surface: FLHistory/RoundRecord et al. used to live here
+from repro.core.federation import (  # noqa: F401
+    EvalHarness,
+    Federation,
+    FederatedTask,
+    FLHistory,
+    RoundRecord,
+)
+from repro.data import schema
 
 
-@dataclass
-class RoundRecord:
-    round: int
-    participants: List[int]
-    train_loss: float
-    combined_loss: float
-    comm_gb: float
-    mean_accuracy: Optional[float] = None
-    wall_time_s: float = 0.0
+class FLServer(Federation):
+    """Deprecated: use ``Federation.from_config(fl, task, client_data)``.
 
-
-@dataclass
-class FLHistory:
-    records: List[RoundRecord] = field(default_factory=list)
-    final_accuracy: float = 0.0
-    rounds_run: int = 0
-    total_comm_gb: float = 0.0
-    total_train_time_s: float = 0.0
-
-
-class FLServer:
-    """Runs FL over synthetic non-iid client datasets.
-
-    model plumbing: ``flm`` (FLModel), ``init_fn(key)->params``,
-    ``eval_fn(params, batch)->accuracy``, batch builders from numpy data.
+    Runs FL over synthetic non-iid client datasets with the legacy
+    flat-argument constructor; behavior (seeds, history, donation,
+    batched eval) is identical to the Federation it builds.
     """
 
     def __init__(
@@ -57,202 +54,24 @@ class FLServer:
         steps_per_round: int = 10,
         param_bytes: int = 4,
     ):
-        self.flm = flm
-        self.fl = fl
-        self.eval_fn = eval_fn
-        self.client_data = client_data
-        self.steps_per_round = steps_per_round
-        self.rng = np.random.default_rng(fl.seed)
-        key = jax.random.PRNGKey(fl.seed)
-        self.global_params = init_fn(key)
-        # every client starts from the broadcast initial model (Alg. 1 l.1)
-        n = fl.n_clients
-        self.local_params = jax.tree.map(
-            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape).copy(), self.global_params
+        warnings.warn(
+            "FLServer(flm, init_fn, eval_fn, ...) is deprecated; build a "
+            "FederatedTask and use Federation.from_config(fl, task, "
+            "client_data) (see docs/API.md)",
+            DeprecationWarning,
+            stacklevel=2,
         )
-        self.n_params = sum(x.size for x in jax.tree.leaves(self.global_params))
-        self.param_bytes = param_bytes
-        self.es_state = es.ESState.init(n)
-        self.history = FLHistory()
-        # Donation (§Perf): the round fn may reuse the old global/cohort
-        # buffers for its outputs, and the cohort scatter updates the
-        # C-way stacked local-param store in place instead of copying it
-        # every round. Both inputs are dead after the call by construction
-        # (we reassign self.global_params / self.local_params).
-        layout = fl.cohort_layout
-        if layout == "auto":
-            layout = "scan" if jax.default_backend() == "cpu" else "vmap"
-        self.cohort_layout = layout
-        round_fn = fedspu.fl_round_scan if layout == "scan" else fedspu.fl_round_vmap
-        donate = (0, 1) if fl.donate_buffers else ()
-        self._round_fn = jax.jit(
-            partial(
-                round_fn,
-                self.flm,
-                method=fl.method,
-                lr=fl.lr,
-                compact=fl.compact_agg,
-                fused=fl.fused_round,
-                kernel_mode=fl.kernel_mode,
-            ),
-            donate_argnums=donate,
+        task = FederatedTask(
+            flm=flm,
+            init_fn=init_fn,
+            eval_fn=eval_fn,
+            label_key=schema.label_key(client_data[0]["train"]),
         )
-        self._gather_fn = jax.jit(
-            lambda store, idx: jax.tree.map(lambda s: s[idx], store)
+        super().__init__(
+            task,
+            client_data,
+            fl,
+            steps_per_round=steps_per_round,
+            param_bytes=param_bytes,
         )
-        self._scatter_fn = jax.jit(
-            lambda store, idx, upd: jax.tree.map(
-                lambda s, u: s.at[idx].set(u), store, upd
-            ),
-            donate_argnums=(0,) if fl.donate_buffers else (),
-        )
-        self._loss_fn = jax.jit(self.flm.loss_fn)
-        self._eval_fn = jax.jit(eval_fn)
-        # Batched eval (§Perf): one jitted call over a client chunk instead
-        # of a Python loop of per-client dispatches. On CPU the per-client
-        # map is a lax.map (sequential — keeps the fast single-model conv
-        # lowering and bounds activation memory); on accelerators a vmap
-        # (clients fill the device batch dim).
-        batched = (
-            (lambda f: jax.jit(lambda lp, tb: jax.lax.map(lambda args: f(*args), (lp, tb))))
-            if jax.default_backend() == "cpu"
-            else (lambda f: jax.jit(jax.vmap(f)))
-        )
-        self._batch_loss_fn = batched(self.flm.loss_fn)
-        self._batch_eval_fn = batched(eval_fn)
-        self._test_stack: Optional[Dict[str, np.ndarray]] = None
-
-    # ------------------------------------------------------------------
-    def _select(self) -> np.ndarray:
-        pool = np.where(~self.es_state.stopped)[0] if self.fl.early_stopping else np.arange(self.fl.n_clients)
-        k = min(self.fl.clients_per_round, len(pool))
-        return self.rng.choice(pool, size=k, replace=False)
-
-    def _cohort_batches(self, cohort: np.ndarray):
-        per_client = [
-            synthetic.sample_batches(
-                self.rng, self.client_data[c]["train"], self.steps_per_round, self.fl.batch_size
-            )
-            for c in cohort
-        ]
-        return jax.tree.map(lambda *xs: jnp.stack(xs), *per_client)
-
-    TEST_N = 128  # fixed eval-batch size: one jit shape for every client
-    EVAL_CHUNK = 8  # clients per vmapped eval call (bounds activation mem)
-
-    def _test_batch_np(self, cid: int) -> Dict[str, np.ndarray]:
-        te = self.client_data[cid]["test"]
-        n = len(next(iter(te.values())))
-        rng = np.random.default_rng(10_000 + cid)
-        idx = np.arange(n) if n == self.TEST_N else rng.choice(n, self.TEST_N, replace=n < self.TEST_N)
-        return {k: v[idx] for k, v in te.items()}
-
-    def _test_batch(self, cid: int):
-        return {k: jnp.asarray(v) for k, v in self._test_batch_np(cid).items()}
-
-    def _test_stack_all(self) -> Dict[str, np.ndarray]:
-        """Client-stacked [N, TEST_N, ...] test batches (built once)."""
-        if self._test_stack is None:
-            per = [self._test_batch_np(c) for c in range(self.fl.n_clients)]
-            self._test_stack = {k: np.stack([p[k] for p in per]) for k in per[0]}
-        return self._test_stack
-
-    def _batched_over_clients(self, vfn, params_stacked, client_ids: np.ndarray) -> np.ndarray:
-        """Run a vmapped per-client fn in EVAL_CHUNK-sized client chunks.
-
-        params_stacked rows map 1:1 onto client_ids (row i = client
-        client_ids[i]); ragged tails are padded by clamping the index so
-        every chunk compiles to one shape.
-        """
-        stack = self._test_stack_all()
-        n = len(client_ids)
-        out = []
-        for s in range(0, n, self.EVAL_CHUNK):
-            rows = np.minimum(np.arange(s, s + self.EVAL_CHUNK), n - 1)
-            lp = jax.tree.map(lambda x: x[jnp.asarray(rows)], params_stacked)
-            tb = {k: jnp.asarray(v[client_ids[rows]]) for k, v in stack.items()}
-            out.append(np.asarray(vfn(lp, tb))[: min(self.EVAL_CHUNK, n - s)])
-        return np.concatenate(out)
-
-    # ------------------------------------------------------------------
-    def run_round(self, t: int) -> bool:
-        """One round; returns False when FL terminated (all stopped)."""
-        if self.fl.early_stopping and self.es_state.all_stopped:
-            return False
-        cohort = self._select()
-        t0 = time.perf_counter()
-        keys = jax.random.split(jax.random.fold_in(jax.random.PRNGKey(self.fl.seed), t), len(cohort))
-        p_ratios = jnp.array([client_ratio(self.fl, int(c)) for c in cohort], jnp.float32)
-        batches = self._cohort_batches(cohort)
-        weights = jnp.array(
-            [len(self.client_data[c]["train"]["y" if "y" in self.client_data[c]["train"] else "labels"]) for c in cohort],
-            jnp.float32,
-        )
-        cohort_idx = jnp.asarray(np.asarray(cohort))
-        locals_c = self._gather_fn(self.local_params, cohort_idx)
-
-        new_global, new_locals, train_losses, fracs = self._round_fn(
-            self.global_params, locals_c, keys, p_ratios, batches, weights
-        )
-        self.global_params = new_global
-        self.local_params = self._scatter_fn(self.local_params, cohort_idx, new_locals)
-        wall = time.perf_counter() - t0
-
-        # Eq. 6 combined losses + ES bookkeeping
-        if self.fl.batched_eval:
-            test_losses = self._batched_over_clients(
-                self._batch_loss_fn, new_locals, np.asarray(cohort)
-            )
-        else:
-            test_losses = []
-            for i, c in enumerate(cohort):
-                lp = jax.tree.map(lambda x: x[i], new_locals)
-                test_losses.append(float(self._loss_fn(lp, self._test_batch(int(c)))))
-        combined = es.combined_loss(
-            np.asarray(train_losses, np.float64), np.asarray(test_losses, np.float64), self.fl.split_lambda
-        )
-        if self.fl.early_stopping:
-            self.es_state = es.update(self.es_state, cohort, combined)
-
-        comm_gb = float(
-            np.sum(np.asarray(fracs, np.float64)) * self.n_params * self.param_bytes * 2 / 1e9
-        )
-        self.history.records.append(
-            RoundRecord(
-                round=t,
-                participants=[int(c) for c in cohort],
-                train_loss=float(np.mean(np.asarray(train_losses))),
-                combined_loss=float(np.mean(combined)),
-                comm_gb=comm_gb,
-                wall_time_s=wall,
-            )
-        )
-        self.history.total_comm_gb += comm_gb
-        self.history.total_train_time_s += wall
-        self.history.rounds_run = t + 1
-        return True
-
-    # ------------------------------------------------------------------
-    def evaluate(self, max_clients: Optional[int] = None) -> float:
-        """Mean personalized accuracy over clients' own test sets."""
-        n = self.fl.n_clients if max_clients is None else min(max_clients, self.fl.n_clients)
-        if self.fl.batched_eval:
-            accs = self._batched_over_clients(
-                self._batch_eval_fn, self.local_params, np.arange(self.fl.n_clients)[:n]
-            )
-            return float(np.mean(accs))
-        accs = []
-        for c in range(n):
-            lp = jax.tree.map(lambda x: x[c], self.local_params)
-            accs.append(float(self._eval_fn(lp, self._test_batch(c))))
-        return float(np.mean(accs))
-
-    def run(self, rounds: Optional[int] = None, eval_every: int = 0) -> FLHistory:
-        rounds = self.fl.max_rounds if rounds is None else rounds
-        for t in range(rounds):
-            if not self.run_round(t):
-                break
-            if eval_every and (t + 1) % eval_every == 0:
-                self.history.records[-1].mean_accuracy = self.evaluate(max_clients=20)
-        self.history.final_accuracy = self.evaluate()
-        return self.history
+        self.eval_fn = eval_fn  # legacy attribute surface

@@ -6,6 +6,8 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.data import schema
+
 
 def dirichlet_partition(
     seed: int, labels: np.ndarray, n_clients: int, alpha: float, min_size: int = 8
@@ -48,5 +50,5 @@ def make_federated_dataset(
     seed: int, data: Dict[str, np.ndarray], n_clients: int, alpha: float, lam: float
 ):
     """Full pipeline: Dirichlet split + per-client train/test."""
-    parts = dirichlet_partition(seed, data["y"], n_clients, alpha)
+    parts = dirichlet_partition(seed, schema.labels(data), n_clients, alpha)
     return [split_train_test(seed + i, data, parts[i], lam) for i, _ in enumerate(parts)]

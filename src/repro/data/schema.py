@@ -1,0 +1,30 @@
+"""Client-dataset schema: one place that knows how a split is keyed.
+
+Every client split is a flat ``{key: np.ndarray}`` dict with one label
+array — ``"y"`` on the CNN track, ``"labels"`` on the LM track. The
+server, eval harness and partitioner all used to re-guess that key
+inline; they now go through these helpers.
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+LABEL_KEYS = ("y", "labels")
+
+
+def label_key(data: Mapping) -> str:
+    """The label key of a split ("y" | "labels")."""
+    for k in LABEL_KEYS:
+        if k in data:
+            return k
+    raise KeyError(f"no label key in {sorted(data)}; expected one of {LABEL_KEYS}")
+
+
+def labels(data: Mapping):
+    """The label array of a split."""
+    return data[label_key(data)]
+
+
+def num_examples(data: Mapping) -> int:
+    """Number of examples in a split (leading axis of any field)."""
+    return len(next(iter(data.values())))

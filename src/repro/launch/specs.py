@@ -16,7 +16,6 @@ scanned repeat dim). Decode shards the KV cache *sequence* over "model"
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict
 
 import jax

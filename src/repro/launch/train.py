@@ -18,23 +18,33 @@ import argparse
 import json
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro import checkpoint as ckpt_lib
 from repro.configs import ARCHS, FLConfig, get_config, reduce_config
 from repro.core import fedspu
-from repro.core.server import FLServer
-from repro.data import partition, synthetic
+from repro.launch import experiment
 from repro.models import cnn
-from repro.models import model as tmodel
 
 DATASETS = {
     "emnist": (cnn.EMNIST_CNN, 2e-4, 16),
     "cifar": (cnn.CIFAR_CNN, 0.1, 128),
     "speech": (cnn.SPEECH_CNN, 5e-4, 16),
 }
+
+
+def _run_track(args, spec: experiment.ExperimentSpec, meta: dict) -> dict:
+    fed = experiment.build_federation(spec)
+    hist = fed.run(eval_every=args.eval_every)
+    out = dict(
+        **meta,
+        method=spec.fl.method,
+        rounds_run=hist.rounds_run,
+        final_accuracy=hist.final_accuracy,
+        total_comm_gb=hist.total_comm_gb,
+        total_train_time_s=hist.total_train_time_s,
+    )
+    if args.ckpt_dir:
+        ckpt_lib.save_tree(args.ckpt_dir, hist.rounds_run, fed.global_params)
+    return out
 
 
 def run_paper_track(args) -> dict:
@@ -50,35 +60,16 @@ def run_paper_track(args) -> dict:
         early_stopping=args.early_stopping,
         seed=args.seed,
     )
-    data = synthetic.make_classification_data(
-        fl.seed, args.samples, cfg.in_shape, cfg.n_classes
+    spec = experiment.ExperimentSpec(
+        fl=fl, dataset=cfg, samples=args.samples, steps_per_round=args.steps_per_round
     )
-    client_data = partition.make_federated_dataset(
-        fl.seed, data, fl.n_clients, fl.dirichlet_alpha, fl.split_lambda
-    )
-    server = FLServer(
-        fedspu.bind_cnn(cfg),
-        init_fn=lambda key: cnn.init_params(cfg, key),
-        eval_fn=lambda p, b: cnn.accuracy(p, cfg, b),
-        client_data=client_data,
-        fl=fl,
-        steps_per_round=args.steps_per_round,
-    )
-    hist = server.run(eval_every=args.eval_every)
-    out = dict(
+    meta = dict(
         track="paper",
         dataset=args.dataset,
-        method=fl.method,
         alpha=fl.dirichlet_alpha,
         early_stopping=fl.early_stopping,
-        rounds_run=hist.rounds_run,
-        final_accuracy=hist.final_accuracy,
-        total_comm_gb=hist.total_comm_gb,
-        total_train_time_s=hist.total_train_time_s,
     )
-    if args.ckpt_dir:
-        ckpt_lib.save_tree(args.ckpt_dir, hist.rounds_run, server.global_params)
-    return out
+    return _run_track(args, spec, meta)
 
 
 def run_arch_track(args) -> dict:
@@ -96,44 +87,12 @@ def run_arch_track(args) -> dict:
         early_stopping=args.early_stopping,
         seed=args.seed,
     )
-    seq = args.seq_len
-    # per-client skewed LM corpora (non-iid analogue for the LM track)
-    client_data = []
-    for cid in range(fl.n_clients):
-        corpus = synthetic.make_lm_corpus(fl.seed + cid, 64, seq, cfg.vocab_size, skew_id=cid)
-        cut = int(64 * fl.split_lambda)
-        client_data.append(
-            {
-                "train": {k: v[:cut] for k, v in corpus.items()},
-                "test": {k: v[cut:] for k, v in corpus.items()},
-            }
-        )
-
-    def eval_fn(params, batch):
-        logits = tmodel.forward(params, cfg, batch)
-        return (jnp.argmax(logits, -1) == batch["labels"]).mean()
-
-    server = FLServer(
-        fedspu.bind_transformer(cfg),
-        init_fn=lambda key: tmodel.init_params(cfg, key),
-        eval_fn=eval_fn,
-        client_data=client_data,
-        fl=fl,
+    # 64 client-skewed sequences per client (non-iid analogue, λ split)
+    spec = experiment.ExperimentSpec(
+        fl=fl, dataset=cfg, samples=64, seq_len=args.seq_len,
         steps_per_round=args.steps_per_round,
     )
-    hist = server.run(eval_every=args.eval_every)
-    out = dict(
-        track="arch",
-        arch=cfg.name,
-        method=fl.method,
-        rounds_run=hist.rounds_run,
-        final_accuracy=hist.final_accuracy,
-        total_comm_gb=hist.total_comm_gb,
-        total_train_time_s=hist.total_train_time_s,
-    )
-    if args.ckpt_dir:
-        ckpt_lib.save_tree(args.ckpt_dir, hist.rounds_run, server.global_params)
-    return out
+    return _run_track(args, spec, dict(track="arch", arch=cfg.name))
 
 
 def main(argv=None) -> int:

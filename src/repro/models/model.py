@@ -19,7 +19,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import BlockSpec, ModelConfig, Stage
+from repro.configs.base import BlockSpec, ModelConfig
 from repro.models import mamba as mamba_mod
 from repro.models import moe as moe_mod
 from repro.models import layers as layers_mod
@@ -198,6 +198,45 @@ def make_caches(cfg: ModelConfig, batch: int, seq_len: int):
             stage_caches.append(stacked)
         caches.append(stage_caches)
     return caches
+
+
+def prefill_to_decode_caches(cfg: ModelConfig, prefill_caches, total_len: int):
+    """Embed prompt-length prefill caches into decode caches sized for
+    ``total_len`` total context (prefill → decode handoff).
+
+    ``prefill`` returns caches at prompt length S; ``decode_step`` wants
+    the ``make_caches`` layout (capacity ``total_len``, ring-buffered for
+    sliding-window attention). Attention k/v/pos are scattered to slot
+    ``pos % cap`` — exactly where ``decode_step`` would have written them
+    had it replayed the prompt token-by-token; mamba caches (conv tail +
+    final SSM state) are already decode-shaped and pass through.
+    """
+    out = []
+    for si, stage in enumerate(cfg.stages):
+        stage_out = []
+        for pi, bs in enumerate(stage.pattern):
+            c = prefill_caches[si][pi]
+            if "attn" in c:
+                c = dict(c, attn=_attn_prefill_to_decode(bs, c["attn"], total_len))
+            stage_out.append(c)
+        out.append(stage_out)
+    return out
+
+
+def _attn_prefill_to_decode(bs: BlockSpec, cache, total_len: int):
+    """[R, B, S, ...] prefill k/v/pos -> capacity-``cap`` decode buffers."""
+    k, v, pos = cache["k"], cache["v"], cache["pos"]
+    cap = min(bs.window, total_len) if bs.window is not None else total_len
+    keep = min(k.shape[2], cap)  # a ring buffer only holds the last cap
+    k, v, pos = k[:, :, -keep:], v[:, :, -keep:], pos[:, :, -keep:]
+    slot = pos % cap
+    put = jax.vmap(jax.vmap(lambda buf, val, s: buf.at[s].set(val)))
+    r, b = k.shape[:2]
+    return {
+        "k": put(jnp.zeros(k.shape[:2] + (cap,) + k.shape[3:], k.dtype), k, slot),
+        "v": put(jnp.zeros(v.shape[:2] + (cap,) + v.shape[3:], v.dtype), v, slot),
+        "pos": put(jnp.full((r, b, cap), -1, jnp.int32), pos, slot),
+    }
 
 
 def decode_step(params: Params, cfg: ModelConfig, caches, tokens_or_embeds, pos):

@@ -1,0 +1,20 @@
+# Composable federation strategies: the Strategy protocol, the
+# @register_strategy registry, and the six builtin schemes. The round
+# engines (repro.core.fedspu) consume these as static callables.
+from repro.strategies.base import (  # noqa: F401
+    Strategy,
+    available_strategies,
+    default_aggregate,
+    get_strategy,
+    register_strategy,
+    resolve_strategy,
+)
+from repro.strategies import builtin  # noqa: F401  (registers the six builtins)
+from repro.strategies.builtin import (  # noqa: F401
+    FedMP,
+    FedSPU,
+    FjORD,
+    Hermes,
+    PruneFL,
+    RandomDropout,
+)

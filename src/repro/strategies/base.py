@@ -1,0 +1,182 @@
+"""Strategy protocol + registry for sub-model federation schemes.
+
+FedSPU is one point in a family of sub-model training schemes (federated
+dropout, FjORD ordered dropout, importance-pruning baselines). A
+``Strategy`` captures what varies between them as three hooks, each a
+pure function the jitted round engines close over as a static callable:
+
+  sample_masks  — which units a client holds active this round
+  merge         — how the client's training start point is built from the
+                  global and personal models (FedSPU merges, dropout prunes)
+  aggregate     — how trained sub-models fold back into the global model
+
+Everything else (the masked local SGD, cohort layouts, kernel dispatch,
+donation) is shared engine machinery in ``repro.core.fedspu`` and is
+strategy-agnostic. New schemes are added by registering a Strategy — the
+engine is never edited:
+
+    @register_strategy("my_scheme")
+    class MyScheme(Strategy):
+        def sample_masks(self, flm, global_params, key, p_ratio, batch=None):
+            ...
+
+    FLConfig(method="my_scheme")  # resolved through the registry
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Type, Union
+
+import jax
+
+from repro.core import masks as M
+from repro.kernels import ops
+
+
+class Strategy:
+    """Base sub-model federation strategy.
+
+    Subclasses must implement ``sample_masks``; ``merge`` defaults to
+    dropout-style pruning and ``aggregate`` to the Fig. 9 masked weighted
+    average — FedSPU overrides ``merge`` only.
+
+    Instances are stateless: the round engines close over them inside
+    jitted functions, so any per-round state must flow through the hook
+    arguments (params, key, batch), never through ``self``.
+    """
+
+    name: str = ""
+
+    # -- hooks ----------------------------------------------------------
+    def sample_masks(self, flm, global_params, key, p_ratio, batch=None):
+        """Unit masks for one client (True = active / trained / sent).
+
+        flm: the model plumbing bundle (``fedspu.FLModel``);
+        key: per-client PRNG key; p_ratio: the client's active ratio p_k;
+        batch: the client's first minibatch (for gradient-based scores).
+        """
+        raise NotImplementedError
+
+    def merge(self, flm, global_params, local_params, mask_tree):
+        """Build the client's training start point (round-start select).
+
+        Default: prune — inactive parameters zeroed (dropout baselines).
+        """
+        return M.apply_param_mask(global_params, mask_tree)
+
+    def aggregate(
+        self,
+        flm,
+        global_params,
+        trained_stacked,
+        unit_masks_stacked,
+        weights,
+        *,
+        compact: bool = False,
+        mask_trees=None,
+        kernel_mode: str = "ref",
+    ):
+        """Fig. 9: per-parameter weighted average over the clients that
+        held the parameter active; parameters nobody trained keep the old
+        global value. See ``default_aggregate`` for the knobs.
+        """
+        return default_aggregate(
+            flm,
+            global_params,
+            trained_stacked,
+            unit_masks_stacked,
+            weights,
+            compact=compact,
+            mask_trees=mask_trees,
+            kernel_mode=kernel_mode,
+        )
+
+    def __repr__(self) -> str:  # registry listings / error messages
+        return f"<Strategy {self.name or type(self).__name__}>"
+
+
+def default_aggregate(
+    flm,
+    global_params,
+    trained_stacked,
+    unit_masks_stacked,
+    weights,
+    *,
+    compact: bool = False,
+    mask_trees=None,
+    kernel_mode: str = "ref",
+):
+    """The shared masked weighted average every builtin strategy uses.
+
+    trained_stacked / unit_masks_stacked have a leading client axis C;
+    ``weights`` is [C] (n_k, zero to drop a client e.g. after early stop).
+
+    ``compact=True`` (§Perf): the denominator is accumulated at the
+    compact (broadcastable) mask shape instead of the full parameter
+    shape, and the mask is applied by select rather than a materialized
+    f32 product. ``mask_trees``: optional pre-expanded client-stacked
+    compact mask trees threaded through from the local step (skips the
+    second expand sweep). ``kernel_mode``: kernel dispatch for the sum.
+    """
+    if mask_trees is None:
+        mask_trees = jax.vmap(
+            lambda p, um: M.normalize_mask_tree(p, flm.expand(p, um))
+        )(trained_stacked, unit_masks_stacked)
+    return ops.masked_aggregate_tree(
+        global_params, trained_stacked, mask_trees, weights, mode=kernel_mode, compact=compact
+    )
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Strategy] = {}
+
+
+def register_strategy(name_or_cls: Union[str, Type[Strategy], Strategy, None] = None):
+    """Class decorator registering a Strategy under ``name`` (defaults to
+    the class's ``name`` attribute, else its lowercased class name).
+
+        @register_strategy("fedspu")
+        class FedSPU(Strategy): ...
+
+    Also usable bare (``@register_strategy``) or with an instance.
+    Registering an existing name overwrites it (latest wins), so tests
+    and notebooks can re-register freely.
+    """
+
+    def _register(obj, name: Optional[str] = None):
+        strat = obj() if isinstance(obj, type) else obj
+        if not isinstance(strat, Strategy):
+            raise TypeError(f"@register_strategy expects a Strategy, got {obj!r}")
+        key = name or strat.name or type(strat).__name__.lower()
+        strat.name = key
+        _REGISTRY[key] = strat
+        return obj
+
+    if isinstance(name_or_cls, str) or name_or_cls is None:
+        name = name_or_cls
+        return lambda obj: _register(obj, name)
+    return _register(name_or_cls)
+
+
+def get_strategy(name: str) -> Strategy:
+    """Look up a registered strategy by name."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown strategy {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def resolve_strategy(method: Union[str, Strategy]) -> Strategy:
+    """Accept either a registry name or a Strategy instance."""
+    if isinstance(method, Strategy):
+        return method
+    return get_strategy(method)
+
+
+def available_strategies() -> tuple:
+    """Registered strategy names, in registration order."""
+    return tuple(_REGISTRY)

@@ -1,0 +1,94 @@
+"""The six builtin strategies (paper §5 baselines + FedSPU itself).
+
+Ported from the former string-``method`` dispatch chains in
+``fedspu.sample_client_masks`` / ``_client_round``; the round-for-round
+equivalence with those chains is pinned by tests/test_strategies.py and
+tests/test_round_fused.py.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import masks as M
+from repro.strategies.base import Strategy, register_strategy
+
+
+def _random_masks(flm, key, p_ratio):
+    return M.sample_unit_masks(
+        key, flm.unit_counts, p_ratio, repeats_shapes=flm.repeats_shapes, method="random"
+    )
+
+
+@register_strategy("fedspu")
+class FedSPU(Strategy):
+    """The paper's scheme: random unit masks; frozen parameters keep the
+    client's *personal* values (Fig. 8b merge) instead of being pruned."""
+
+    def sample_masks(self, flm, global_params, key, p_ratio, batch=None):
+        return _random_masks(flm, key, p_ratio)
+
+    def merge(self, flm, global_params, local_params, mask_tree):
+        return M.merge_active(global_params, local_params, mask_tree)
+
+
+@register_strategy("random")
+class RandomDropout(Strategy):
+    """Federated Dropout (Wen et al.): random unit masks, inactive
+    parameters pruned to zero."""
+
+    def sample_masks(self, flm, global_params, key, p_ratio, batch=None):
+        return _random_masks(flm, key, p_ratio)
+
+
+@register_strategy("fjord")
+class FjORD(Strategy):
+    """FjORD ordered dropout: the leftmost p_k fraction of units survives
+    (nested sub-models across capacity tiers)."""
+
+    def sample_masks(self, flm, global_params, key, p_ratio, batch=None):
+        return M.sample_unit_masks(
+            key, flm.unit_counts, p_ratio, repeats_shapes=flm.repeats_shapes, method="ordered"
+        )
+
+
+class _ImportancePruning(Strategy):
+    """Shared importance-pruning skeleton: score units, keep the top p_k."""
+
+    def scores(self, flm, global_params, batch):
+        raise NotImplementedError
+
+    def sample_masks(self, flm, global_params, key, p_ratio, batch=None):
+        return M.sample_unit_masks(
+            key,
+            flm.unit_counts,
+            p_ratio,
+            repeats_shapes=flm.repeats_shapes,
+            scores_tree=self.scores(flm, global_params, batch),
+            method="importance",
+        )
+
+
+@register_strategy("fedmp")
+class FedMP(_ImportancePruning):
+    """FedMP: l1 parameter-magnitude importance."""
+
+    def scores(self, flm, global_params, batch):
+        return flm.importance(global_params, 1)
+
+
+@register_strategy("hermes")
+class Hermes(_ImportancePruning):
+    """Hermes: l2 parameter-magnitude importance."""
+
+    def scores(self, flm, global_params, batch):
+        return flm.importance(global_params, 2)
+
+
+@register_strategy("prunefl")
+class PruneFL(_ImportancePruning):
+    """PruneFL: l2 gradient-magnitude importance on the client's first
+    minibatch."""
+
+    def scores(self, flm, global_params, batch):
+        grads = jax.grad(flm.loss_fn)(global_params, batch)
+        return flm.importance(grads, 2)

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import fedspu, masks as M
+from repro.core import fedspu
 from repro.models import cnn
 
 CFG = cnn.CIFAR_CNN

@@ -2,7 +2,6 @@
 trip-count multipliers (the roofline's data source)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import hlo_cost

@@ -1,6 +1,5 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp
 oracle, assert_allclose."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -3,7 +3,6 @@ FedSPU's correctness."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _prop import given, settings, st
 
 from repro.core import masks as M

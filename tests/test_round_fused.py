@@ -63,6 +63,20 @@ def test_fused_matches_seed_naive(setup, method, layout):
 
 
 @pytest.mark.parametrize("layout", ["vmap", "scan"])
+@pytest.mark.parametrize("method", fedspu.METHODS)
+def test_strategy_instance_matches_string_method(setup, method, layout):
+    """The registry is the only dispatch: passing the Strategy instance
+    to the engine is bit-identical to passing the legacy method string."""
+    from repro.strategies import get_strategy
+
+    by_name = _round(setup, method, layout, compact=True, fused=True)
+    by_obj = _round(setup, get_strategy(method), layout, compact=True, fused=True)
+    for s, f in zip(by_name, by_obj):
+        for x, y in zip(jax.tree.leaves(s), jax.tree.leaves(f)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("layout", ["vmap", "scan"])
 def test_fused_interpret_kernels_match_seed(setup, layout):
     """The Pallas kernel routing itself (interpret mode on CPU) matches
     the seed path through the full round engine."""

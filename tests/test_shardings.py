@@ -3,12 +3,9 @@ like the production pod) + small-mesh lowering of the production step
 functions (the 256/512-chip meshes are exercised by launch/dryrun.py in
 its own process — XLA device-count flags are global)."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
 
-from repro.configs import get_config, reduce_config
+from repro.configs import get_config
 from repro.launch import specs
 from repro.launch import shardings as sh
 from repro.launch.mesh import make_abstract_mesh, make_local_mesh

@@ -1,0 +1,206 @@
+"""Strategy registry: the six legacy methods round-for-round match their
+string-``method`` runs through the legacy server shim, the registry
+resolves/rejects names, and a custom registered strategy runs end-to-end
+through the Federation builder."""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import FLConfig
+from repro.core import fedspu
+from repro.core.federation import (
+    EarlyStoppingCallback,
+    Federation,
+    FederatedTask,
+)
+from repro.core.server import FLServer
+from repro.data import partition, synthetic
+from repro.models import cnn
+from repro import strategies
+
+CFG = cnn.EMNIST_CNN
+
+
+def _fl(method="fedspu", **kw):
+    kw.setdefault("n_clients", 4)
+    kw.setdefault("clients_per_round", 2)
+    kw.setdefault("max_rounds", 2)
+    kw.setdefault("lr", 0.05)
+    kw.setdefault("batch_size", 4)
+    kw.setdefault("dirichlet_alpha", 0.5)
+    kw.setdefault("seed", 0)
+    return FLConfig(method=method, **kw)
+
+
+@pytest.fixture(scope="module")
+def client_data():
+    data = synthetic.make_classification_data(0, 240, CFG.in_shape, CFG.n_classes)
+    return partition.make_federated_dataset(0, data, 4, 0.5, 0.7)
+
+
+def _legacy_server(fl, client_data) -> FLServer:
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return FLServer(
+            fedspu.bind_cnn(CFG),
+            init_fn=lambda key: cnn.init_params(CFG, key),
+            eval_fn=lambda p, b: cnn.accuracy(p, CFG, b),
+            client_data=client_data,
+            fl=fl,
+            steps_per_round=2,
+        )
+
+
+def _federation(fl, client_data, **kw) -> Federation:
+    return Federation.from_config(
+        fl, FederatedTask.from_cnn(CFG), client_data, steps_per_round=2, **kw
+    )
+
+
+def _assert_history_equal(h0, h1):
+    assert h0.rounds_run == h1.rounds_run
+    for r0, r1 in zip(h0.records, h1.records):
+        assert r0.participants == r1.participants
+        np.testing.assert_array_equal(r0.train_loss, r1.train_loss)
+        np.testing.assert_array_equal(r0.combined_loss, r1.combined_loss)
+        np.testing.assert_array_equal(r0.comm_gb, r1.comm_gb)
+    np.testing.assert_array_equal(h0.final_accuracy, h1.final_accuracy)
+    np.testing.assert_array_equal(h0.total_comm_gb, h1.total_comm_gb)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_builtins_registered():
+    assert set(fedspu.METHODS) <= set(strategies.available_strategies())
+    for name in fedspu.METHODS:
+        strat = strategies.get_strategy(name)
+        assert isinstance(strat, strategies.Strategy)
+        assert strat.name == name
+        # resolve accepts both names and instances
+        assert strategies.resolve_strategy(name) is strat
+        assert strategies.resolve_strategy(strat) is strat
+
+
+def test_unknown_strategy_raises():
+    with pytest.raises(KeyError, match="unknown strategy"):
+        strategies.get_strategy("no-such-scheme")
+
+
+def test_register_requires_strategy():
+    with pytest.raises(TypeError):
+        strategies.register_strategy("bogus")(object)
+
+
+# ---------------------------------------------------------------------------
+# legacy equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", fedspu.METHODS)
+def test_registry_matches_legacy_string_run(method, client_data):
+    """Every registered builtin is round-for-round identical to its
+    legacy string-``method`` run (same seeds, same FLHistory)."""
+    legacy = _legacy_server(_fl(method), client_data)
+    fed = _federation(_fl(method), client_data)
+    _assert_history_equal(legacy.run(), fed.run())
+    for a, b in zip(jax.tree.leaves(legacy.global_params), jax.tree.leaves(fed.global_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flserver_shim_warns_and_delegates(client_data):
+    with pytest.warns(DeprecationWarning, match="Federation.from_config"):
+        s = FLServer(
+            fedspu.bind_cnn(CFG),
+            init_fn=lambda key: cnn.init_params(CFG, key),
+            eval_fn=lambda p, b: cnn.accuracy(p, CFG, b),
+            client_data=client_data,
+            fl=_fl(),
+            steps_per_round=2,
+        )
+    assert isinstance(s, Federation)
+    assert s.strategy.name == "fedspu"
+
+
+def test_task_label_key_mismatch_raises(client_data):
+    """The task's declared data schema is validated at build time."""
+    import dataclasses
+
+    lm_keyed_task = dataclasses.replace(FederatedTask.from_cnn(CFG), label_key="labels")
+    with pytest.raises(ValueError, match="label key"):
+        Federation.from_config(_fl(), lm_keyed_task, client_data)
+
+
+def test_strategy_instance_override(client_data):
+    """from_config accepts a Strategy instance over fl.method."""
+    fed = _federation(_fl("fedspu"), client_data, strategy=strategies.get_strategy("fjord"))
+    assert fed.strategy.name == "fjord"
+    assert fed.run_round(0)
+    assert np.isfinite(fed.history.records[-1].train_loss)
+
+
+# ---------------------------------------------------------------------------
+# early stopping as a pluggable callback
+# ---------------------------------------------------------------------------
+
+
+def test_early_stopping_callback_installed_by_config(client_data):
+    fed = _federation(_fl(early_stopping=True), client_data)
+    assert any(isinstance(cb, EarlyStoppingCallback) for cb in fed.callbacks)
+    no_es = _federation(_fl(), client_data)
+    assert not any(isinstance(cb, EarlyStoppingCallback) for cb in no_es.callbacks)
+    # dormant state still exposed for the legacy attribute surface
+    assert not no_es.es_state.stopped.any()
+
+
+def test_early_stopping_matches_legacy(client_data):
+    fl = _fl(early_stopping=True, max_rounds=6)
+    legacy = _legacy_server(fl, client_data)
+    fed = _federation(fl, client_data)
+    _assert_history_equal(legacy.run(), fed.run())
+    np.testing.assert_array_equal(legacy.es_state.stopped, fed.es_state.stopped)
+    np.testing.assert_array_equal(legacy.es_state.prev_loss, fed.es_state.prev_loss)
+
+
+# ---------------------------------------------------------------------------
+# custom strategy end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_custom_strategy_end_to_end(client_data):
+    """A toy user strategy registers and runs through the whole stack
+    (registry -> Federation -> jitted engine -> history) untouched."""
+    from repro.core import masks as M
+
+    @strategies.register_strategy("toy_topheavy")
+    class ToyTopHeavy(strategies.Strategy):
+        """Keeps the FIRST k units active (FjORD-like) but merges like
+        FedSPU, exercising both custom hooks."""
+
+        def sample_masks(self, flm, global_params, key, p_ratio, batch=None):
+            return M.sample_unit_masks(
+                key, flm.unit_counts, p_ratio,
+                repeats_shapes=flm.repeats_shapes, method="ordered",
+            )
+
+        def merge(self, flm, global_params, local_params, mask_tree):
+            return M.merge_active(global_params, local_params, mask_tree)
+
+    assert "toy_topheavy" in strategies.available_strategies()
+    fed = _federation(_fl("toy_topheavy"), client_data)
+    hist = fed.run()
+    assert hist.rounds_run == 2
+    assert all(np.isfinite(r.train_loss) for r in hist.records)
+    assert 0.0 <= hist.final_accuracy <= 1.0
+    # ordered masks + fedspu merge == fjord masks with personalization:
+    # the sampled masks must match fjord's exactly under the same key
+    flm = fed.flm
+    key = jax.random.PRNGKey(3)
+    toy = fedspu.sample_client_masks(flm, fed.global_params, key, 0.5, "toy_topheavy")
+    fjord = fedspu.sample_client_masks(flm, fed.global_params, key, 0.5, "fjord")
+    for a, b in zip(jax.tree.leaves(toy), jax.tree.leaves(fjord)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
