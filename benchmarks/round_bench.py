@@ -1,7 +1,8 @@
 """Round-latency benchmark: seed naive round path vs the fused
-kernel-backed engine (docs/PERF.md), on the CPU oracle ("ref") path.
+kernel-backed engine, and the host round loop vs the block-fused
+scan-over-rounds driver (docs/PERF.md), on the CPU oracle ("ref") path.
 
-Two cohorts:
+Four cohorts:
   cifar_cnn            — the paper's CIFAR CNN via the full Federation
                          round (built through repro.launch.experiment)
                          (engine + cohort gather/scatter + Eq. 6 test-loss
@@ -9,19 +10,35 @@ Two cohorts:
   transformer_reduced  — a reduced granite-MoE transformer cohort timed
                          through the jitted round engine alone (the
                          launch-layer hot path).
+  block_fused          — the CIFAR CNN cohort at dispatch-bound shapes:
+                         PR 1's fused host loop vs rounds_per_block
+                         rounds fused into one jitted lax.scan with
+                         device-resident data (repro.core.rounds).
+  transformer_block    — the same host-loop vs block comparison on a
+                         reduced granite-MoE federated-LM cohort.
 
 Writes BENCH_round.json at the repo root:
-  {cohort: {seed_s_per_round, fused_s_per_round, speedup, max_abs_drift}}
+  {cohort: {*_s_per_round, speedup, max_abs_drift, config}}
 
 ``max_abs_drift`` is the largest |Δ| between the two paths' global params
 after the timed rounds — the equivalence check riding along with the
-timing (tests/test_round_fused.py pins it tightly per method).
+timing (tests/test_round_fused.py and tests/test_block_rounds.py pin it
+tightly per method). For the block entries the baseline is
+``repro.core.rounds.host_reference_run``: a per-round host replay of the
+exact block semantics (same cohorts, same device-sampled batches), so
+the drift isolates the scan/cond/scatter machinery, not RNG differences.
+
+``--smoke``: tiny-shape block-vs-reference run asserting
+``max_abs_drift < 1e-5`` (scripts/bench.sh, CI perf-smoke job); writes
+nothing.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
+from contextlib import contextmanager
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +46,8 @@ import jax.numpy as jnp
 from benchmarks import common
 from repro.configs import FLConfig, get_config, reduce_config
 from repro.core import fedspu
-from repro.core.federation import Federation
+from repro.core import rounds as rounds_mod
+from repro.core.federation import EvalHarness, Federation
 from repro.launch import experiment
 from repro.models import cnn
 
@@ -55,6 +73,18 @@ def _drift(a, b) -> float:
     )
 
 
+@contextmanager
+def _test_n(n: int):
+    """Temporarily shrink the Eq. 6 eval batch (applies to BOTH compared
+    paths — the block comparisons run in the dispatch-bound regime)."""
+    old = EvalHarness.TEST_N
+    EvalHarness.TEST_N = n
+    try:
+        yield
+    finally:
+        EvalHarness.TEST_N = old
+
+
 # ---------------------------------------------------------------------------
 # CIFAR CNN cohort through the full server round
 # ---------------------------------------------------------------------------
@@ -64,7 +94,7 @@ def _cnn_server(flags: dict, *, clients: int, cohort: int, steps: int, batch: in
     fl = FLConfig(
         n_clients=clients,
         clients_per_round=cohort,
-        max_rounds=8,
+        max_rounds=512,
         lr=0.05,
         batch_size=batch,
         dirichlet_alpha=0.5,
@@ -88,6 +118,20 @@ def _time_server_rounds(server: Federation, rounds: int) -> float:
     return (time.perf_counter() - t0) / rounds
 
 
+def _time_block_rounds(fed: Federation, blocks: int) -> float:
+    """Per-round wall time over ``blocks`` fused blocks (one extra block
+    for compile + warmup)."""
+    R = fed.fl.rounds_per_block
+    fed.run_block(0)  # compile + warmup
+    jax.block_until_ready(fed.global_params)
+    t0 = time.perf_counter()
+    n = 0
+    for b in range(1, blocks + 1):
+        n += fed.run_block(b * R)
+    jax.block_until_ready(fed.global_params)
+    return (time.perf_counter() - t0) / n
+
+
 def bench_cnn(rounds: int = 3, *, clients: int = 16, cohort: int = 8, steps: int = 2, batch: int = 8) -> dict:
     servers = {
         name: _cnn_server(flags, clients=clients, cohort=cohort, steps=steps, batch=batch)
@@ -101,6 +145,103 @@ def bench_cnn(rounds: int = 3, *, clients: int = 16, cohort: int = 8, steps: int
         max_abs_drift=_drift(servers["seed"].global_params, servers["fused"].global_params),
         config=dict(clients=clients, cohort=cohort, steps_per_round=steps, batch_size=batch, rounds_timed=rounds),
     )
+
+
+# ---------------------------------------------------------------------------
+# block-fused driver vs the fused host loop (dispatch-bound regime)
+# ---------------------------------------------------------------------------
+
+
+def bench_cnn_block(
+    *,
+    clients: int = 16,
+    cohort: int = 4,
+    steps: int = 1,
+    batch: int = 2,
+    rounds_per_block: int = 8,
+    blocks: int = 2,
+    test_n: int = 32,
+) -> dict:
+    """Fused host loop vs the block driver on the CIFAR CNN cohort.
+
+    Shapes are deliberately dispatch-bound (small minibatches, small
+    eval batch): block fusion removes the per-round host round-trip, so
+    its win scales with the overhead : compute ratio — docs/PERF.md
+    reports both regimes.
+    """
+    with _test_n(test_n):
+        host = _cnn_server(FUSED_FLAGS, clients=clients, cohort=cohort, steps=steps, batch=batch)
+        host_s = _time_server_rounds(host, rounds_per_block * blocks)
+        block_flags = dict(FUSED_FLAGS, rounds_per_block=rounds_per_block)
+        fed = _cnn_server(block_flags, clients=clients, cohort=cohort, steps=steps, batch=batch)
+        block_s = _time_block_rounds(fed, blocks)
+        total_rounds = rounds_per_block * (blocks + 1)  # incl. warmup block
+        ref = _cnn_server(block_flags, clients=clients, cohort=cohort, steps=steps, batch=batch)
+        gp_ref, _, _ = rounds_mod.host_reference_run(ref, total_rounds)
+        return dict(
+            host_s_per_round=host_s,
+            block_s_per_round=block_s,
+            speedup=host_s / block_s,
+            max_abs_drift=_drift(fed.global_params, gp_ref),
+            config=dict(
+                clients=clients, cohort=cohort, steps_per_round=steps, batch_size=batch,
+                rounds_per_block=rounds_per_block, blocks_timed=blocks, test_n=test_n,
+            ),
+        )
+
+
+def _lm_server(flags: dict, *, clients: int, cohort: int, steps: int, batch: int, samples: int, seq: int) -> Federation:
+    cfg = reduce_config(get_config("granite-moe-3b-a800m"))
+    fl = FLConfig(
+        n_clients=clients,
+        clients_per_round=cohort,
+        max_rounds=512,
+        lr=0.01,
+        batch_size=batch,
+        method="fedspu",
+        seed=0,
+        **flags,
+    )
+    spec = experiment.ExperimentSpec(
+        fl=fl, dataset=cfg, samples=samples, steps_per_round=steps, seq_len=seq
+    )
+    return experiment.build_federation(spec)
+
+
+def bench_transformer_block(
+    *,
+    clients: int = 4,
+    cohort: int = 2,
+    steps: int = 1,
+    batch: int = 2,
+    seq: int = 64,
+    samples: int = 32,
+    rounds_per_block: int = 4,
+    blocks: int = 2,
+    test_n: int = 16,
+) -> dict:
+    """Fused host loop vs the block driver on the reduced granite-MoE
+    federated-LM cohort (the launch-layer track through Federation)."""
+    with _test_n(test_n):
+        kw = dict(clients=clients, cohort=cohort, steps=steps, batch=batch, samples=samples, seq=seq)
+        host = _lm_server(FUSED_FLAGS, **kw)
+        host_s = _time_server_rounds(host, rounds_per_block * blocks)
+        block_flags = dict(FUSED_FLAGS, rounds_per_block=rounds_per_block)
+        fed = _lm_server(block_flags, **kw)
+        block_s = _time_block_rounds(fed, blocks)
+        ref = _lm_server(block_flags, **kw)
+        gp_ref, _, _ = rounds_mod.host_reference_run(ref, rounds_per_block * (blocks + 1))
+        return dict(
+            host_s_per_round=host_s,
+            block_s_per_round=block_s,
+            speedup=host_s / block_s,
+            max_abs_drift=_drift(fed.global_params, gp_ref),
+            config=dict(
+                arch=reduce_config(get_config("granite-moe-3b-a800m")).name,
+                clients=clients, cohort=cohort, steps_per_round=steps, batch_size=batch,
+                seq=seq, rounds_per_block=rounds_per_block, blocks_timed=blocks, test_n=test_n,
+            ),
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -162,25 +303,58 @@ def bench_transformer(rounds: int = 8, *, cohort: int = 4, steps: int = 2, batch
 # ---------------------------------------------------------------------------
 
 
+def smoke(max_drift: float = 1e-5) -> dict:
+    """Tiny-shape block-vs-reference equivalence gate (scripts/bench.sh,
+    CI perf-smoke). Asserts drift, prints, writes nothing."""
+    res = bench_cnn_block(
+        clients=4, cohort=2, steps=1, batch=2, rounds_per_block=4, blocks=1, test_n=16
+    )
+    print(json.dumps(res, indent=2))
+    assert res["max_abs_drift"] < max_drift, (
+        f"block driver drifted {res['max_abs_drift']:.2e} from the host "
+        f"reference (allowed {max_drift:.0e})"
+    )
+    print(f"smoke OK: max_abs_drift {res['max_abs_drift']:.2e} < {max_drift:.0e}")
+    return res
+
+
 def run() -> dict:
     results = {
         "cifar_cnn": bench_cnn(),
         "transformer_reduced": bench_transformer(),
+        "block_fused": bench_cnn_block(),
+        "transformer_block": bench_transformer_block(),
         "env": dict(backend=jax.default_backend(), devices=jax.device_count(), jax=jax.__version__),
     }
     rows = [
-        [k, f"{v['seed_s_per_round']*1e3:.0f}", f"{v['fused_s_per_round']*1e3:.0f}",
-         f"{v['speedup']:.2f}x", f"{v['max_abs_drift']:.2e}"]
+        [
+            k,
+            f"{v.get('seed_s_per_round', v.get('host_s_per_round')) * 1e3:.0f}",
+            f"{v.get('fused_s_per_round', v.get('block_s_per_round')) * 1e3:.0f}",
+            f"{v['speedup']:.2f}x",
+            f"{v['max_abs_drift']:.2e}",
+        ]
         for k, v in results.items()
         if k != "env"
     ]
-    print("\n== Round latency: seed naive vs fused kernel-backed path ==")
-    print(common.fmt_table(rows, ["cohort", "seed ms/round", "fused ms/round", "speedup", "max drift"]))
+    print("\n== Round latency: baseline vs fused path (host/block) ==")
+    print(common.fmt_table(rows, ["cohort", "base ms/round", "fused ms/round", "speedup", "max drift"]))
     with open(OUT_PATH, "w") as f:
         json.dump(results, f, indent=2)
     print(f"wrote {os.path.normpath(OUT_PATH)}")
     return results
 
 
-if __name__ == "__main__":
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true", help="tiny-shape drift gate; writes nothing")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        smoke()
+        return 0
     run()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

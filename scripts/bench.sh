@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Perf smoke gate: runs benchmarks/round_bench.py at tiny shapes and
+# asserts the block-fused driver's max_abs_drift < 1e-5 against the
+# per-round host reference (repro.core.rounds.host_reference_run).
+# Wired into .github/workflows/ci.yml as the non-blocking perf-smoke
+# job so engine-math regressions surface on PRs without gating merges.
+# Usage: scripts/bench.sh [--full]   (--full regenerates BENCH_round.json)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ "${1:-}" == "--full" ]]; then
+  exec python -m benchmarks.round_bench
+fi
+exec python -m benchmarks.round_bench --smoke

@@ -217,6 +217,16 @@ class FLConfig:
     # scan on CPU (XLA's client-batched conv lowering is pathological
     # there), vmap on accelerators (clients ride the data mesh axes)
 
+    # Block-fused rounds (docs/PERF.md "Block-fused rounds"): run
+    # rounds_per_block rounds inside one jitted lax.scan with client data,
+    # cohort sampling, Eq. 6 eval and early stopping all on device.
+    # rounds_per_block > 1 implies on-device data; on_device_data=True
+    # alone opts the per-round driver into the device store + jax.random
+    # sampling (RNG stream differs from the legacy numpy sampler). The
+    # defaults keep the host loop bit-for-bit.
+    rounds_per_block: int = 1
+    on_device_data: bool = False
+
 
 def client_ratio(fl: FLConfig, client_id: int) -> float:
     """p_k for a client: 5 uniform clusters as in the paper."""

@@ -1,7 +1,7 @@
 # FedSPU — the paper's primary contribution: stochastic-parameter-update
 # personalized FL (masks, strategy-driven round engine, early stopping,
 # federation components, legacy server shim).
-from repro.core import early_stopping, fedspu, federation, masks, server  # noqa: F401
+from repro.core import early_stopping, fedspu, federation, masks, rounds, server  # noqa: F401
 from repro.core.fedspu import (  # noqa: F401
     METHODS,
     FLModel,

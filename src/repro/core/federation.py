@@ -185,18 +185,13 @@ class EvalHarness:
         self._loss_fn = jax.jit(task.flm.loss_fn)
         self._eval_fn = jax.jit(task.eval_fn)
         # Batched eval (§Perf): one jitted call over a client chunk instead
-        # of a Python loop of per-client dispatches. On CPU the per-client
-        # map is a lax.map (sequential — keeps the fast single-model conv
-        # lowering and bounds activation memory); on accelerators a vmap
-        # (clients fill the device batch dim).
-        batched = (
-            (lambda f: jax.jit(lambda lp, tb: jax.lax.map(lambda args: f(*args), (lp, tb))))
-            if jax.default_backend() == "cpu"
-            else (lambda f: jax.jit(jax.vmap(f)))
-        )
+        # of a Python loop of per-client dispatches. Backend heuristic
+        # shared with the block driver — see ``fedspu.cohort_eval``.
+        batched = lambda f: jax.jit(fedspu.cohort_eval(f))
         self._batch_loss_fn = batched(task.flm.loss_fn)
         self._batch_eval_fn = batched(task.eval_fn)
         self._test_stack: Optional[Dict[str, np.ndarray]] = None
+        self._test_stack_dev: Optional[Dict[str, jnp.ndarray]] = None
 
     # -- test batches ---------------------------------------------------
     def test_batch_np(self, cid: int) -> Dict[str, np.ndarray]:
@@ -216,20 +211,30 @@ class EvalHarness:
             self._test_stack = {k: np.stack([p[k] for p in per]) for k in per[0]}
         return self._test_stack
 
+    def test_stack_dev(self) -> Dict[str, jnp.ndarray]:
+        """Device-resident ``[N, TEST_N, ...]`` test stack, uploaded once
+        and shared by every subsequent eval (and the block driver)."""
+        if self._test_stack_dev is None:
+            self._test_stack_dev = {k: jnp.asarray(v) for k, v in self._test_stack_all().items()}
+            self._test_stack = None  # host copy is dead once uploaded
+        return self._test_stack_dev
+
     def _batched_over_clients(self, vfn, params_stacked, client_ids: np.ndarray) -> np.ndarray:
         """Run a vmapped per-client fn in EVAL_CHUNK-sized client chunks.
 
         params_stacked rows map 1:1 onto client_ids (row i = client
         client_ids[i]); ragged tails are padded by clamping the index so
-        every chunk compiles to one shape.
+        every chunk compiles to one shape. Test batches are sliced from
+        the resident device stack (no per-call H2D re-upload).
         """
-        stack = self._test_stack_all()
+        stack = self.test_stack_dev()
         n = len(client_ids)
         out = []
         for s in range(0, n, self.EVAL_CHUNK):
             rows = np.minimum(np.arange(s, s + self.EVAL_CHUNK), n - 1)
             lp = jax.tree.map(lambda x: x[jnp.asarray(rows)], params_stacked)
-            tb = {k: jnp.asarray(v[client_ids[rows]]) for k, v in stack.items()}
+            ids = jnp.asarray(client_ids[rows])
+            tb = {k: v[ids] for k, v in stack.items()}
             out.append(np.asarray(vfn(lp, tb))[: min(self.EVAL_CHUNK, n - s)])
         return np.concatenate(out)
 
@@ -349,6 +354,21 @@ class Federation:
         self.sampler = CohortSampler(fl, self.rng)
         self.comm = CommMeter(n_params, param_bytes)
         self.eval_harness = EvalHarness(task, client_data, fl)
+        # Hoisted per-client constants (§Perf): p_k and the n_k weights
+        # used to be rebuilt as python list comprehensions every round;
+        # both paths now index into these [n_clients] device arrays.
+        self.p_ratios_all = jnp.asarray([client_ratio(fl, c) for c in range(n)], jnp.float32)
+        self.weights_all = jnp.asarray(
+            [schema.num_examples(client_data[c]["train"]) for c in range(n)], jnp.float32
+        )
+        # Block-fused rounds (docs/PERF.md): scan-over-rounds driver with
+        # device-resident data. rounds_per_block == 1 without
+        # on_device_data keeps the legacy host loop (bit-for-bit,
+        # numpy sampler) as the fallback / equivalence baseline.
+        if fl.rounds_per_block < 1:
+            raise ValueError(f"rounds_per_block must be >= 1, got {fl.rounds_per_block}")
+        self._use_block = fl.rounds_per_block > 1 or fl.on_device_data
+        self._block_runner = None
         if callbacks is None:
             callbacks = [EarlyStoppingCallback(n)] if fl.early_stopping else []
         self.callbacks: List[RoundCallback] = list(callbacks)
@@ -451,13 +471,10 @@ class Federation:
         cohort = self.sampler.select(self._pool())
         t0 = time.perf_counter()
         keys = jax.random.split(jax.random.fold_in(jax.random.PRNGKey(self.fl.seed), t), len(cohort))
-        p_ratios = jnp.array([client_ratio(self.fl, int(c)) for c in cohort], jnp.float32)
-        batches = self._cohort_batches(cohort)
-        weights = jnp.array(
-            [schema.num_examples(self.client_data[c]["train"]) for c in cohort],
-            jnp.float32,
-        )
         cohort_idx = jnp.asarray(np.asarray(cohort))
+        p_ratios = self.p_ratios_all[cohort_idx]
+        batches = self._cohort_batches(cohort)
+        weights = self.weights_all[cohort_idx]
         locals_c = self._gather_fn(self.local_params, cohort_idx)
 
         new_global, new_locals, train_losses, fracs = self._round_fn(
@@ -465,6 +482,9 @@ class Federation:
         )
         self.global_params = new_global
         self.local_params = self._scatter_fn(self.local_params, cohort_idx, new_locals)
+        # block on the round outputs so the clock reads compute, not
+        # dispatch latency (async dispatch returns immediately)
+        jax.block_until_ready((self.global_params, self.local_params))
         wall = time.perf_counter() - t0
 
         # Eq. 6 combined losses + callback bookkeeping (ES et al.)
@@ -491,6 +511,99 @@ class Federation:
         self.history.rounds_run = t + 1
         return True
 
+    # -- block-fused rounds (docs/PERF.md "Block-fused rounds") ---------
+    def _ensure_block_runner(self):
+        """Build (once) the scan-over-rounds driver with all client data
+        resident on device."""
+        if self._block_runner is None:
+            # lazy: keeps the block machinery out of the legacy hot path
+            from repro.core import rounds as rounds_mod
+            from repro.data import device_store
+
+            self._block_runner = rounds_mod.BlockRunner(
+                flm=self.flm,
+                strategy=self.strategy,
+                fl=self.fl,
+                steps_per_round=self.steps_per_round,
+                layout=self.cohort_layout,
+                store=device_store.build_device_store(self.client_data),
+                test_stack=self.eval_harness.test_stack_dev(),
+                p_ratios_all=self.p_ratios_all,
+                weights_all=self.weights_all,
+                # ES mirrors the host loop: driven by the installed
+                # callbacks, not the raw fl.early_stopping flag
+                es_enabled=any(
+                    isinstance(cb, EarlyStoppingCallback) for cb in self.callbacks
+                ),
+            )
+        return self._block_runner
+
+    def run_block(self, t_start: int, limit: Optional[int] = None) -> int:
+        """Run one fused block of up to ``fl.rounds_per_block`` rounds
+        starting at absolute round ``t_start`` (bounded by ``limit``, an
+        absolute round budget). Appends the executed rounds' records to
+        the history and returns how many rounds actually ran (0 when the
+        block opened with every client already stopped)."""
+        runner = self._ensure_block_runner()
+        st = self.es_state
+        gp, store, res = runner.run_block(
+            t_start, self.global_params, self.local_params, st.prev_loss, st.stopped,
+            t_limit=limit,
+        )
+        self.global_params, self.local_params = gp, store
+        self.es_state = es.ESState(res.prev_loss.astype(np.float64), res.stopped)
+        n_exec = res.rounds_executed
+        per_round_wall = res.wall_time_s / max(n_exec, 1)
+        for r in range(n_exec):  # executed rounds are a prefix of the block
+            t = t_start + r
+            v = res.valid[r]
+            cohort = res.cohorts[r][v]
+            combined = res.combined[r][v]
+            comm_gb = self.comm.round_gb(res.fracs[r])
+            for cb in self.callbacks:
+                # ES already ran on device (synced above); other hooks
+                # observe the round post-hoc, in order.
+                if not isinstance(cb, EarlyStoppingCallback):
+                    cb.on_round_end(self, t, cohort, combined)
+            self.history.records.append(
+                RoundRecord(
+                    round=t,
+                    participants=[int(c) for c in cohort],
+                    train_loss=float(res.train_losses[r][v].mean()),
+                    combined_loss=float(combined.mean()),
+                    comm_gb=comm_gb,
+                    wall_time_s=per_round_wall,
+                )
+            )
+            self.history.rounds_run = t + 1
+        self.history.total_comm_gb = self.comm.total_gb
+        self.history.total_train_time_s += res.wall_time_s
+        return n_exec
+
+    def _run_blocks(self, rounds: int, eval_every: int) -> FLHistory:
+        R = self.fl.rounds_per_block
+        t = 0
+        while t < rounds:
+            if any(cb.should_terminate(self) for cb in self.callbacks):
+                break
+            n_before = len(self.history.records)
+            n_exec = self.run_block(t, limit=rounds)
+            if eval_every:
+                # mid-block params are never materialized on host: the
+                # accuracy attaches to the last cadence round of the
+                # block, evaluated at block-end params (docs/PERF.md)
+                cadence = [
+                    rec for rec in self.history.records[n_before:]
+                    if (rec.round + 1) % eval_every == 0
+                ]
+                if cadence:
+                    cadence[-1].mean_accuracy = self.evaluate(max_clients=20)
+            if n_exec < R:
+                break
+            t += R
+        self.history.final_accuracy = self.evaluate()
+        return self.history
+
     # ------------------------------------------------------------------
     def evaluate(self, max_clients: Optional[int] = None) -> float:
         """Mean personalized accuracy over clients' own test sets."""
@@ -499,6 +612,8 @@ class Federation:
 
     def run(self, rounds: Optional[int] = None, eval_every: int = 0) -> FLHistory:
         rounds = self.fl.max_rounds if rounds is None else rounds
+        if self._use_block:
+            return self._run_blocks(rounds, eval_every)
         for t in range(rounds):
             if not self.run_round(t):
                 break

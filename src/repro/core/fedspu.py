@@ -76,6 +76,17 @@ def sample_client_masks(flm: FLModel, global_params, key, p_ratio, method, batch
     return _resolve(method).sample_masks(flm, global_params, key, p_ratio, batch)
 
 
+def cohort_eval(fn):
+    """Per-client batched eval over a client-stacked cohort: ``lax.map``
+    on CPU (keeps the fast single-model conv lowering and bounds
+    activation memory), ``vmap`` on accelerators (clients fill the
+    device batch dim). The one backend heuristic shared by EvalHarness,
+    the block driver, and the host reference replay."""
+    if jax.default_backend() == "cpu":
+        return lambda lp, tb: jax.lax.map(lambda args: fn(*args), (lp, tb))
+    return jax.vmap(fn)
+
+
 def local_train(flm: FLModel, params, mask_tree, batches, lr, *, fused: bool = True, kernel_mode: str = "auto"):
     """Masked SGD over ``batches`` (leading axis = steps). Eq. 4/5.
 

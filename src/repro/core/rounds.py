@@ -1,0 +1,367 @@
+"""Block-fused round driver: many federated rounds inside ONE jitted scan.
+
+The per-round host loop (``Federation.run_round``) pays a full Python
+round-trip every round: cohort selection and batch building on host,
+several jit dispatches (gather, round, scatter, chunked eval), and a
+blocking device sync before the next round can start. This module runs
+``rounds_per_block`` rounds inside one ``jax.lax.scan`` with everything
+the loop needs resident on device:
+
+  - client train data from ``repro.data.device_store`` (padded
+    ``[N, max_n, ...]`` stacks; minibatch indices via ``jax.random``)
+  - cohort selection as a masked top-k over ``jax.random`` scores,
+    honoring the early-stopping pool mask
+  - the existing per-round engine (``fedspu.fl_round_vmap`` /
+    ``fl_round_scan``) as the scan body
+  - the Eq. 6 cohort test-loss folded into the body (client-stacked
+    ``[N, TEST_N, ...]`` test batches resident on device)
+  - early stopping (§3.2 / Algorithm 2) threaded through the carry —
+    once every client has stopped (or the round budget ``t_limit`` is
+    hit) the remaining scheduled rounds short-circuit through a
+    ``lax.cond`` passthrough: no training, no aggregation, no parameter
+    writes.
+
+The host reads back one stacked ``BlockResult`` per block and
+reconstructs per-round ``RoundRecord``s from it (``Federation``'s job).
+
+RNG: round ``t`` uses mask keys ``split(fold_in(PRNGKey(seed), t), K)``
+(the host path's scheme) and a separate data stream
+``fold_in(fold_in(PRNGKey(seed), DATA_STREAM), t)`` for cohort selection
+and minibatch indices. Keys depend only on the *absolute* round index,
+so trajectories are invariant to ``rounds_per_block`` — but they differ
+from the legacy numpy sampler stream (docs/PERF.md "Block-fused
+rounds").
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core import fedspu
+from repro.data import device_store as ds
+
+# Stream tag separating the data keys (cohort selection + minibatch
+# indices) from the per-round mask keys, both rooted at PRNGKey(seed).
+DATA_STREAM = 0x0D5E
+
+
+def _valid_expand(valid, x):
+    """Broadcast a [K] slot mask over a [K, ...] leaf."""
+    return valid.reshape(valid.shape + (1,) * (x.ndim - 1))
+
+
+@dataclass
+class BlockResult:
+    """Host-side view of one fused block (numpy; read back once)."""
+
+    executed: np.ndarray  # [R] bool — round actually ran (prefix-true)
+    cohorts: np.ndarray  # [R, K] int32 client ids (slots, see ``valid``)
+    valid: np.ndarray  # [R, K] bool — slot holds a real (active) client
+    train_losses: np.ndarray  # [R, K] f32
+    test_losses: np.ndarray  # [R, K] f32
+    combined: np.ndarray  # [R, K] f32 (Eq. 6)
+    fracs: np.ndarray  # [R, K] f32 active fractions (0 on invalid slots)
+    prev_loss: np.ndarray  # [N] f32 ES prev combined loss
+    stopped: np.ndarray  # [N] bool ES stop mask
+    wall_time_s: float
+
+    @property
+    def rounds_executed(self) -> int:
+        return int(self.executed.sum())
+
+    @property
+    def all_stopped(self) -> bool:
+        return bool(self.stopped.all())
+
+
+class BlockRunner:
+    """Compiles and runs one federation's block-fused round driver.
+
+    Built once per ``Federation`` (``Federation._ensure_block_runner``);
+    the jitted block fn is traced a single time and reused for every
+    block (``t0`` / ``t_limit`` are traced scalars).
+    """
+
+    def __init__(
+        self,
+        *,
+        flm: fedspu.FLModel,
+        strategy,
+        fl: FLConfig,
+        steps_per_round: int,
+        layout: str,
+        store: ds.DeviceStore,
+        test_stack: Dict[str, Any],
+        p_ratios_all,
+        weights_all,
+        es_enabled: Optional[bool] = None,
+    ):
+        if fl.rounds_per_block < 1:
+            raise ValueError(f"rounds_per_block must be >= 1, got {fl.rounds_per_block}")
+        self.fl = fl
+        self.R = fl.rounds_per_block
+        self.store = store
+        self.test_stack = test_stack
+        self.p_ratios_all = p_ratios_all
+        self.weights_all = weights_all
+
+        N, K, R = fl.n_clients, fl.clients_per_round, fl.rounds_per_block
+        lam = fl.split_lambda
+        # ES is a property of the installed callbacks, not the raw config
+        # flag (the host loop early-stops iff an EarlyStoppingCallback is
+        # present) — Federation passes the callback-derived value.
+        if es_enabled is None:
+            es_enabled = fl.early_stopping
+        steps, batch = steps_per_round, fl.batch_size
+        round_fn = fedspu.fl_round_scan if layout == "scan" else fedspu.fl_round_vmap
+        base_key = jax.random.PRNGKey(fl.seed)
+        data_base = jax.random.fold_in(base_key, DATA_STREAM)
+        eval_cohort = fedspu.cohort_eval(flm.loss_fn)
+
+        def select_cohort(t, stopped):
+            """Uniform without-replacement cohort from the active pool:
+            top-k of jax.random scores with stopped clients sunk below
+            every active score. Slots past the active-pool size are
+            flagged invalid (their effects are masked out downstream).
+            ``stopped=None`` means the pool is statically full (no ES)."""
+            key = jax.random.split(jax.random.fold_in(data_base, t))[0]
+            scores = jax.random.uniform(key, (N,))
+            if stopped is None:
+                _, cohort = jax.lax.top_k(scores, K)
+                return cohort.astype(jnp.int32), jnp.ones((K,), bool)
+            scores = jnp.where(stopped, -1.0, scores)
+            _, cohort = jax.lax.top_k(scores, K)
+            n_active = jnp.sum((~stopped).astype(jnp.int32))
+            valid = jnp.arange(K, dtype=jnp.int32) < jnp.minimum(K, n_active)
+            return cohort.astype(jnp.int32), valid
+
+        def train_eval(t, gp, locals_c, cohort, valid, store, test_stack, p_all, w_all):
+            """The expensive part of one round: cohort minibatch gather,
+            the per-round engine, Eq. 6 test losses. Everything here is
+            skipped when the block has early-exited (the ``lax.cond``
+            below gates exactly this function)."""
+            batch_key = jax.random.split(jax.random.fold_in(data_base, t))[1]
+            keys = jax.random.split(jax.random.fold_in(base_key, t), K)
+            p_ratios = p_all[cohort]
+            weights = jnp.where(valid, w_all[cohort], 0.0)
+            batches = ds.cohort_batches(store, cohort, batch_key, steps, batch)
+            new_g, new_l, losses, fracs = round_fn(
+                flm, gp, locals_c, keys, p_ratios, batches, weights,
+                strategy, fl.lr, compact=fl.compact_agg,
+                fused=fl.fused_round, kernel_mode=fl.kernel_mode,
+            )
+            # Invalid slots (cohort smaller than K after early stops) must
+            # leave their clients' params untouched: weight 0 already
+            # drops them from aggregation; the select below drops their
+            # local update before the scatter.
+            new_l = jax.tree.map(
+                lambda nl, ol: jnp.where(_valid_expand(valid, nl), nl, ol), new_l, locals_c
+            )
+            # Eq. 6 combined loss on the clients' own resident test batches
+            tb = {k: v[cohort] for k, v in test_stack.items()}
+            test_losses = eval_cohort(new_l, tb).astype(jnp.float32)
+            return new_g, new_l, losses.astype(jnp.float32), test_losses, jnp.where(valid, fracs.astype(jnp.float32), 0.0)
+
+        def finish_round(cohort, valid, go, train_losses, test_losses, prev, stopped):
+            """Cheap [N]/[K] bookkeeping, unconditional: Eq. 6 combine and
+            the Algorithm 2 stop rule (stop iff L_t > L_{t-1})."""
+            combined = lam * train_losses + (1.0 - lam) * test_losses
+            live = valid & go
+            prev_c = prev[cohort]
+            if es_enabled:
+                stopped = stopped.at[cohort].set(
+                    jnp.where(live, stopped[cohort] | (combined > prev_c), stopped[cohort])
+                )
+            prev = prev.at[cohort].set(jnp.where(live, combined, prev_c))
+            out = dict(
+                executed=go, cohort=cohort, valid=live,
+                train=train_losses, test=test_losses, combined=combined,
+            )
+            return prev, stopped, out
+
+        def block_full(t0, t_limit, gp, local_store, prev, stopped, store, test_stack, p_all, w_all):
+            """Fast variant: every scheduled round runs (no ES, full block
+            within the round budget) — no ``lax.cond`` in the body, so the
+            scan keeps in-place carry updates for the client store."""
+
+            def body(carry, _):
+                t, gp, local_store, prev, stopped = carry
+                cohort, valid = select_cohort(t, None)
+                locals_c = jax.tree.map(lambda s: s[cohort], local_store)
+                new_g, new_l, tr, te, fr = train_eval(
+                    t, gp, locals_c, cohort, valid, store, test_stack, p_all, w_all
+                )
+                local_store = jax.tree.map(lambda s, u: s.at[cohort].set(u), local_store, new_l)
+                prev, stopped, out = finish_round(
+                    cohort, valid, jnp.array(True), tr, te, prev, stopped
+                )
+                out["fracs"] = fr
+                return (t + 1, new_g, local_store, prev, stopped), out
+
+            carry, outs = jax.lax.scan(body, (t0, gp, local_store, prev, stopped), None, length=R)
+            _, gp, local_store, prev, stopped = carry
+            return gp, local_store, prev, stopped, outs
+
+        def block_gated(t0, t_limit, gp, local_store, prev, stopped, store, test_stack, p_all, w_all):
+            """Gated variant: rounds past the budget — or past the point
+            every client stopped — short-circuit. Only the expensive
+            ``train_eval`` sits inside the ``lax.cond``; the store
+            gather/scatter and the [N]-sized ES bookkeeping stay outside
+            it so the scan carry is never copied through the branches."""
+
+            def body(carry, _):
+                t, gp, local_store, prev, stopped = carry
+                go = t < t_limit
+                if es_enabled:
+                    go = go & ~jnp.all(stopped)
+                cohort, valid = select_cohort(t, stopped if es_enabled else None)
+                locals_c = jax.tree.map(lambda s: s[cohort], local_store)
+                z = jnp.zeros((K,), jnp.float32)
+                new_g, new_l, tr, te, fr = jax.lax.cond(
+                    go,
+                    lambda op: train_eval(t, *op, store, test_stack, p_all, w_all),
+                    lambda op: (op[0], op[1], z, z, z),
+                    (gp, locals_c, cohort, valid),
+                )
+                local_store = jax.tree.map(lambda s, u: s.at[cohort].set(u), local_store, new_l)
+                prev, stopped, out = finish_round(cohort, valid, go, tr, te, prev, stopped)
+                out["fracs"] = fr
+                return (t + 1, new_g, local_store, prev, stopped), out
+
+            carry, outs = jax.lax.scan(body, (t0, gp, local_store, prev, stopped), None, length=R)
+            _, gp, local_store, prev, stopped = carry
+            return gp, local_store, prev, stopped, outs
+
+        donate = (2, 3, 4, 5) if fl.donate_buffers else ()
+        self._jit_full = jax.jit(block_full, donate_argnums=donate)
+        self._jit_gated = jax.jit(block_gated, donate_argnums=donate)
+        self._es_enabled = es_enabled
+
+    # ------------------------------------------------------------------
+    def run_block(self, t_start: int, global_params, local_store, prev_loss, stopped, t_limit: Optional[int] = None):
+        """Run one fused block of up to ``R`` rounds starting at absolute
+        round ``t_start``, bounded by ``t_limit`` (the run's total round
+        budget; ``None`` = unbounded). Returns ``(new_global,
+        new_local_store, BlockResult)``; the wall clock blocks on the
+        outputs (compute, not dispatch).
+
+        Dispatches the cond-free fast variant whenever neither the stop
+        mask nor the round budget can bite this block (no ES, full block
+        within the budget); otherwise the gated variant."""
+        if t_limit is None:
+            t_limit = 2**31 - 1
+        full = (not self._es_enabled) and t_start + self.R <= t_limit
+        fn = self._jit_full if full else self._jit_gated
+        t0 = time.perf_counter()
+        out = fn(
+            jnp.asarray(t_start, jnp.int32),
+            jnp.asarray(t_limit, jnp.int32),
+            global_params,
+            local_store,
+            jnp.asarray(np.asarray(prev_loss), jnp.float32),
+            jnp.asarray(np.asarray(stopped)),
+            self.store,
+            self.test_stack,
+            self.p_ratios_all,
+            self.weights_all,
+        )
+        jax.block_until_ready(out)
+        wall = time.perf_counter() - t0
+        gp, local_store, prev, stopped_out, m = out
+        result = BlockResult(
+            executed=np.asarray(m["executed"]),
+            cohorts=np.asarray(m["cohort"]),
+            valid=np.asarray(m["valid"]),
+            train_losses=np.asarray(m["train"]),
+            test_losses=np.asarray(m["test"]),
+            combined=np.asarray(m["combined"]),
+            fracs=np.asarray(m["fracs"]),
+            prev_loss=np.asarray(prev),
+            stopped=np.asarray(stopped_out),
+            wall_time_s=wall,
+        )
+        return gp, local_store, result
+
+
+# ---------------------------------------------------------------------------
+# host reference replay (tests / benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def host_reference_run(fed, rounds: int):
+    """Per-round host replay of the block semantics — the equivalence
+    baseline for the fused driver (slow; tests and benchmarks only).
+
+    Shares the device-store sampling primitives (the RNG stream is part
+    of the contract) but drives the per-round engine through the
+    federation's own ``_round_fn``, applies the valid-slot masking and
+    early stopping in host numpy, and evaluates Eq. 6 with a standalone
+    jitted cohort loss. Returns ``(global_params, local_store, records)``
+    where ``records`` is a list of per-round dicts
+    ``{t, cohort, valid, train, test, combined}``.
+
+    Note: consumes the federation's parameter buffers when
+    ``donate_buffers`` is on — build a throwaway federation for it.
+    """
+    # ES mirrors the host loop: driven by callback presence, not the raw flag
+    from repro.core.federation import EarlyStoppingCallback
+
+    fl = fed.fl
+    es_on = any(isinstance(cb, EarlyStoppingCallback) for cb in fed.callbacks)
+    N, K = fl.n_clients, fl.clients_per_round
+    steps, batch = fed.steps_per_round, fl.batch_size
+    store = ds.build_device_store(fed.client_data)
+    test_stack = fed.eval_harness.test_stack_dev()
+    base_key = jax.random.PRNGKey(fl.seed)
+    data_base = jax.random.fold_in(base_key, DATA_STREAM)
+    eval_cohort = jax.jit(fedspu.cohort_eval(fed.flm.loss_fn))
+
+    gp = jax.tree.map(lambda x: x.copy(), fed.global_params)
+    local_store = jax.tree.map(lambda x: x.copy(), fed.local_params)
+    prev = np.full(N, np.inf, np.float32)
+    stopped = np.zeros(N, bool)
+    records = []
+    for t in range(rounds):
+        if es_on and stopped.all():
+            break
+        data_key = jax.random.fold_in(data_base, t)
+        cohort_key, batch_key = jax.random.split(data_key)
+        scores = np.asarray(jax.random.uniform(cohort_key, (N,)))
+        scores = np.where(stopped, -1.0, scores)
+        cohort = np.argsort(-scores, kind="stable")[:K]
+        n_active = int((~stopped).sum())
+        valid = np.arange(K) < min(K, n_active)
+        cohort_d = jnp.asarray(cohort)
+        batches = ds.cohort_batches(store, cohort_d, batch_key, steps, batch)
+        keys = jax.random.split(jax.random.fold_in(base_key, t), K)
+        p_ratios = fed.p_ratios_all[cohort_d]
+        weights = jnp.where(jnp.asarray(valid), fed.weights_all[cohort_d], 0.0)
+        locals_c = jax.tree.map(lambda s: s[cohort_d], local_store)
+        new_g, new_l, losses, _ = fed._round_fn(gp, locals_c, keys, p_ratios, batches, weights)
+        locals_c = jax.tree.map(lambda s: s[cohort_d], local_store)  # re-gather (donated)
+        new_l = jax.tree.map(
+            lambda nl, ol: jnp.where(_valid_expand(jnp.asarray(valid), nl), nl, ol),
+            new_l,
+            locals_c,
+        )
+        local_store = jax.tree.map(lambda s, u: s.at[cohort_d].set(u), local_store, new_l)
+        gp = new_g
+        tb = {k: v[cohort_d] for k, v in test_stack.items()}
+        test_losses = np.asarray(eval_cohort(new_l, tb), np.float32)
+        train_losses = np.asarray(losses, np.float32)
+        combined = (fl.split_lambda * train_losses + (1.0 - fl.split_lambda) * test_losses).astype(np.float32)
+        for i in np.where(valid)[0]:
+            c = int(cohort[i])
+            if es_on and combined[i] > prev[c]:
+                stopped[c] = True
+            prev[c] = combined[i]
+        records.append(
+            dict(t=t, cohort=cohort, valid=valid, train=train_losses, test=test_losses, combined=combined)
+        )
+    return gp, local_store, records

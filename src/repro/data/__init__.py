@@ -1,1 +1,1 @@
-from repro.data import partition, schema, synthetic  # noqa: F401
+from repro.data import device_store, partition, schema, synthetic  # noqa: F401

@@ -1,0 +1,103 @@
+"""Device-resident client training data (block-fused rounds, docs/PERF.md).
+
+The host round loop (``Federation.run_round``) rebuilds every cohort
+minibatch in numpy and re-transfers it each round — a per-round
+host round-trip that caps round throughput once the engine itself is
+fused. For the block driver (``repro.core.rounds``) all client train
+shards are padded and stacked to ONE ``[n_clients, max_n, ...]`` device
+stack up front; per-round minibatches are then pure device gathers over
+``jax.random``-sampled indices — no host batch building and no per-round
+H2D transfer.
+
+Padding is by wrap-around (index ``i % n_c``), so padded rows hold valid
+examples; sampled indices are drawn in ``[0, n_c)`` per client, so the
+with-replacement minibatch distribution matches the host sampler
+(``repro.data.synthetic.sample_batches``) — only the RNG *stream*
+differs (``jax.random`` here vs the federation's numpy generator; see
+docs/PERF.md "Block-fused rounds" for the caveat).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import schema
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class DeviceStore:
+    """All clients' train shards, resident on device.
+
+    data: ``{field: [n_clients, max_n, ...]}`` wrap-padded stacks
+    n_examples: ``[n_clients]`` int32 true (unpadded) shard sizes
+    """
+
+    data: Dict[str, jax.Array]
+    n_examples: jax.Array
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.n_examples.shape[0])
+
+    def tree_flatten(self):
+        keys = tuple(sorted(self.data))
+        return tuple(self.data[k] for k in keys) + (self.n_examples,), keys
+
+    @classmethod
+    def tree_unflatten(cls, keys, leaves):
+        return cls(dict(zip(keys, leaves[:-1])), leaves[-1])
+
+
+def build_device_store(client_data: Sequence[Dict], split: str = "train") -> DeviceStore:
+    """Pad/stack every client's ``split`` shard to ``[N, max_n, ...]`` and
+    upload once. Clients shorter than ``max_n`` are wrap-padded."""
+    ns = [schema.num_examples(cd[split]) for cd in client_data]
+    max_n = max(ns)
+    fields = list(client_data[0][split])
+    stacks = {}
+    for k in fields:
+        rows = [
+            np.take(cd[split][k], np.arange(max_n) % n, axis=0)
+            for cd, n in zip(client_data, ns)
+        ]
+        stacks[k] = jnp.asarray(np.stack(rows))
+    return DeviceStore(stacks, jnp.asarray(ns, jnp.int32))
+
+
+def sample_minibatch_indices(key, n_examples, steps: int, batch: int):
+    """``[K, steps, batch]`` with-replacement indices; row ``c`` uniform in
+    ``[0, n_examples[c])`` (``n_examples`` may be traced)."""
+    keys = jax.random.split(key, n_examples.shape[0])
+    return jax.vmap(
+        lambda k, n: jax.random.randint(k, (steps, batch), 0, n)
+    )(keys, n_examples)
+
+
+def gather_cohort_batches(store: DeviceStore, cohort, idx):
+    """Gather ``[K, steps, batch, ...]`` minibatch leaves for ``cohort``
+    rows of the store (``idx`` from ``sample_minibatch_indices``)."""
+    return {
+        k: jax.vmap(lambda r, i: r[i])(v[cohort], idx)
+        for k, v in store.data.items()
+    }
+
+
+def cohort_batches(store: DeviceStore, cohort, key, steps: int, batch: int):
+    """One round's cohort minibatches, entirely on device: sample indices
+    with ``jax.random`` and gather from the resident stack."""
+    idx = sample_minibatch_indices(key, store.n_examples[cohort], steps, batch)
+    return gather_cohort_batches(store, cohort, idx)
+
+
+__all__: List[str] = [
+    "DeviceStore",
+    "build_device_store",
+    "sample_minibatch_indices",
+    "gather_cohort_batches",
+    "cohort_batches",
+]

@@ -146,6 +146,16 @@ def main(argv=None) -> int:
     ap.add_argument("--early-stopping", action="store_true")
     ap.add_argument("--eval-every", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--rounds-per-block", type=int, default=1,
+        help="fuse this many rounds into one jitted scan (block driver; "
+        "jax.random sampling — see docs/PERF.md)",
+    )
+    ap.add_argument(
+        "--on-device-data", action="store_true",
+        help="device-resident client data + jax.random minibatch sampling "
+        "even at rounds-per-block=1",
+    )
     ap.add_argument("--out", default=None, help="write history JSON here")
     args = ap.parse_args(argv)
 
@@ -160,6 +170,8 @@ def main(argv=None) -> int:
             method=args.method,
             early_stopping=args.early_stopping,
             seed=args.seed,
+            rounds_per_block=args.rounds_per_block,
+            on_device_data=args.on_device_data,
         ),
         dataset=args.dataset,
         samples=args.samples,

@@ -1,0 +1,263 @@
+"""Block-fused round driver (docs/PERF.md "Block-fused rounds").
+
+Pins the three contracts of the scan-over-rounds path:
+
+  1. the legacy host loop is untouched: ``rounds_per_block=1`` with host
+     sampling reproduces ``Federation.run`` bit-for-bit across METHODS,
+     including early stopping;
+  2. the fused block matches a per-round host replay of the same
+     semantics (``rounds.host_reference_run``) — same cohorts, same
+     params — and is invariant to the block size;
+  3. early stopping inside a block: clients that stop leave the pool,
+     their params freeze, and once every client stopped the remaining
+     scheduled rounds of the block have no effect.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FLConfig
+from repro.core import fedspu
+from repro.core import rounds as rounds_mod
+from repro.launch import experiment
+from repro.models import cnn
+
+CFG = cnn.EMNIST_CNN
+
+
+def _fed(method="fedspu", es=False, rpb=1, on_device=False, clients=5, cohort=3,
+         rounds=6, lr=0.05, seed=0, steps=2):
+    fl = FLConfig(
+        n_clients=clients,
+        clients_per_round=cohort,
+        max_rounds=rounds,
+        lr=lr,
+        batch_size=4,
+        dirichlet_alpha=0.5,
+        method=method,
+        early_stopping=es,
+        seed=seed,
+        rounds_per_block=rpb,
+        on_device_data=on_device,
+    )
+    spec = experiment.ExperimentSpec(fl=fl, dataset=CFG, samples=60 * clients, steps_per_round=steps)
+    return experiment.build_federation(spec)
+
+
+def _drift(a, b) -> float:
+    return max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def _record_tuples(hist):
+    return [
+        (r.round, tuple(r.participants), r.train_loss, r.combined_loss, r.comm_gb)
+        for r in hist.records
+    ]
+
+
+# ---------------------------------------------------------------------------
+# 1. the =1 host fallback is bit-for-bit the legacy run
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", fedspu.METHODS)
+def test_host_fallback_bit_for_bit(method):
+    """rounds_per_block=1 + host sampling (the defaults) runs the legacy
+    host loop: histories and global params are bit-identical to a config
+    that never mentions the block knobs, incl. with early stopping."""
+    base = _fed(method=method, es=True, rounds=4)
+    explicit = _fed(method=method, es=True, rounds=4, rpb=1, on_device=False)
+    assert not base._use_block and not explicit._use_block
+    h0, h1 = base.run(), explicit.run()
+    assert _record_tuples(h0) == _record_tuples(h1)
+    assert h0.rounds_run == h1.rounds_run
+    assert h0.final_accuracy == h1.final_accuracy
+    for x, y in zip(jax.tree.leaves(base.global_params), jax.tree.leaves(explicit.global_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_hoisted_ratios_and_weights_match_legacy_expressions():
+    """run_round used to rebuild p_ratios/weights per round as
+    ``jnp.array([client_ratio(fl, c) for c in cohort])`` /
+    ``jnp.array([num_examples(...) for c in cohort])``; the hoisted
+    [n_clients] arrays indexed by cohort must be bit-identical to those
+    expressions for every possible cohort slice."""
+    from repro.configs.base import client_ratio
+    from repro.data import schema
+
+    fed = _fed(clients=7, cohort=4)
+    all_ids = jnp.arange(fed.fl.n_clients)
+    want_p = jnp.array([client_ratio(fed.fl, int(c)) for c in range(fed.fl.n_clients)], jnp.float32)
+    want_w = jnp.array(
+        [schema.num_examples(fed.client_data[c]["train"]) for c in range(fed.fl.n_clients)],
+        jnp.float32,
+    )
+    np.testing.assert_array_equal(np.asarray(fed.p_ratios_all[all_ids]), np.asarray(want_p))
+    np.testing.assert_array_equal(np.asarray(fed.weights_all[all_ids]), np.asarray(want_w))
+    cohort = jnp.asarray([5, 0, 3])
+    np.testing.assert_array_equal(np.asarray(fed.p_ratios_all[cohort]), np.asarray(want_p[cohort]))
+    np.testing.assert_array_equal(np.asarray(fed.weights_all[cohort]), np.asarray(want_w[cohort]))
+
+
+def test_explicit_es_callback_matches_flag_in_block_mode():
+    """The block driver keys early stopping off the installed callbacks
+    (like the host loop), not the raw fl.early_stopping flag: passing an
+    explicit EarlyStoppingCallback with the flag off must behave exactly
+    like setting the flag."""
+    from repro.core.federation import EarlyStoppingCallback
+
+    by_flag = _fed(es=True, rpb=3, on_device=True, clients=4, cohort=4, rounds=12, lr=0.6)
+    h_flag = by_flag.run()
+
+    fl = FLConfig(
+        n_clients=4, clients_per_round=4, max_rounds=12, lr=0.6, batch_size=4,
+        dirichlet_alpha=0.5, early_stopping=False, seed=0,
+        rounds_per_block=3, on_device_data=True,
+    )
+    spec = experiment.ExperimentSpec(fl=fl, dataset=CFG, samples=240, steps_per_round=2)
+    by_cb = experiment.build_federation(spec, callbacks=[EarlyStoppingCallback(4)])
+    h_cb = by_cb.run()
+
+    assert h_flag.rounds_run < 12  # divergent lr: ES actually bites
+    assert h_cb.rounds_run == h_flag.rounds_run
+    assert [r.participants for r in h_cb.records] == [r.participants for r in h_flag.records]
+    np.testing.assert_array_equal(by_cb.es_state.stopped, by_flag.es_state.stopped)
+    assert _drift(by_cb.global_params, by_flag.global_params) == 0.0
+
+
+def test_block_knobs_validated():
+    with pytest.raises(ValueError):
+        _fed(rpb=0)
+
+
+# ---------------------------------------------------------------------------
+# 2. block == host reference replay; invariant to block size
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", fedspu.METHODS)
+def test_block_matches_host_reference(method):
+    """The fused driver (cohort selection, device sampling, engine,
+    Eq. 6 eval, ES — all inside one scan) matches a per-round host replay
+    of the same semantics, per method, with early stopping on."""
+    ref_fed = _fed(method=method, es=True, rpb=3, on_device=True, rounds=6)
+    gp_ref, ls_ref, recs = rounds_mod.host_reference_run(ref_fed, 6)
+
+    fed = _fed(method=method, es=True, rpb=3, on_device=True, rounds=6)
+    hist = fed.run()
+    assert hist.rounds_run == len(recs)
+    want_cohorts = [list(map(int, r["cohort"][r["valid"]])) for r in recs]
+    got_cohorts = [r.participants for r in hist.records]
+    assert got_cohorts == want_cohorts
+    assert _drift(fed.global_params, gp_ref) <= 1e-5
+    assert _drift(fed.local_params, ls_ref) <= 1e-5
+    want_combined = np.asarray([r["combined"][r["valid"]].mean() for r in recs])
+    got_combined = np.asarray([r.combined_loss for r in hist.records])
+    np.testing.assert_allclose(got_combined, want_combined, rtol=1e-4, atol=1e-4)
+
+
+def test_block_size_invariance():
+    """Round keys hang off the absolute round index, so trajectories do
+    not depend on rounds_per_block (R=1 device driver == R=4 blocks)."""
+    f1 = _fed(es=True, rpb=1, on_device=True, rounds=8, lr=0.3)
+    f4 = _fed(es=True, rpb=4, on_device=True, rounds=8, lr=0.3)
+    h1, h4 = f1.run(), f4.run()
+    assert h1.rounds_run == h4.rounds_run
+    assert [r.participants for r in h1.records] == [r.participants for r in h4.records]
+    assert _drift(f1.global_params, f4.global_params) <= 1e-5
+    assert _drift(f1.local_params, f4.local_params) <= 1e-5
+
+
+def test_partial_last_block_respects_round_budget():
+    """rounds not a multiple of rounds_per_block: the tail block stops at
+    the budget (gated variant), never overshooting max_rounds."""
+    fed = _fed(rpb=4, on_device=True, rounds=6)
+    hist = fed.run()
+    assert hist.rounds_run == 6
+    assert [r.round for r in hist.records] == list(range(6))
+    ref_fed = _fed(rpb=4, on_device=True, rounds=6)
+    gp_ref, _, recs = rounds_mod.host_reference_run(ref_fed, 6)
+    assert len(recs) == 6
+    assert _drift(fed.global_params, gp_ref) <= 1e-5
+
+
+def test_block_history_records_sane():
+    fed = _fed(rpb=3, on_device=True, rounds=6)
+    hist = fed.run()
+    assert hist.rounds_run == 6 and len(hist.records) == 6
+    assert hist.total_comm_gb > 0
+    for rec in hist.records:
+        assert all(0 <= c < fed.fl.n_clients for c in rec.participants)
+        assert len(set(rec.participants)) == len(rec.participants)
+        assert np.isfinite(rec.train_loss) and np.isfinite(rec.combined_loss)
+        assert rec.comm_gb > 0 and rec.wall_time_s > 0
+
+
+# ---------------------------------------------------------------------------
+# 3. early stopping inside the block
+# ---------------------------------------------------------------------------
+
+
+def test_es_mid_block_freezes_stopped_clients_and_terminates():
+    """With a divergent lr, clients stop mid-block: the driver must (a)
+    terminate without the remaining scheduled rounds taking effect, and
+    (b) leave every stopped client's params untouched from the moment it
+    stops (stopped clients leave the device-side cohort pool)."""
+    rpb, total = 5, 20
+    fed = _fed(es=True, rpb=rpb, on_device=True, clients=4, cohort=4, rounds=total, lr=0.6)
+    snap = None
+    stopped_before = np.zeros(4, bool)
+    t = 0
+    while t < total and not fed.es_state.all_stopped:
+        n_exec = fed.run_block(t, limit=total)
+        if snap is not None and stopped_before.any():
+            for c in np.where(stopped_before)[0]:
+                for s, x in zip(snap, jax.tree.leaves(fed.local_params)):
+                    np.testing.assert_array_equal(s[c], np.asarray(x)[c])
+        snap = [np.asarray(x).copy() for x in jax.tree.leaves(fed.local_params)]
+        stopped_before = fed.es_state.stopped.copy()
+        assert n_exec >= 0
+        t += rpb
+    fed.history.final_accuracy = fed.evaluate()
+
+    assert fed.es_state.all_stopped, "divergent lr should stop every client"
+    assert fed.history.rounds_run < total, "driver must terminate early"
+    # a mid-block stop happened (not on a block boundary) — the scheduled
+    # remainder of that block must have produced no records
+    assert fed.history.rounds_run == len(fed.history.records)
+    # and the whole trajectory matches the host reference replay
+    ref_fed = _fed(es=True, rpb=rpb, on_device=True, clients=4, cohort=4, rounds=total, lr=0.6)
+    gp_ref, ls_ref, recs = rounds_mod.host_reference_run(ref_fed, total)
+    assert fed.history.rounds_run == len(recs)
+    assert _drift(fed.local_params, ls_ref) <= 1e-5
+
+
+def test_es_stopped_clients_leave_cohort():
+    """Once a client stops it never reappears in participants, and cohort
+    slots shrink below clients_per_round rather than re-admitting it."""
+    fed = _fed(es=True, rpb=4, on_device=True, clients=4, cohort=3, rounds=16, lr=0.6)
+    hist = fed.run()
+    seen_stopped = set()
+    stopped_at = {}
+    # reconstruct stop times from the reference replay (same trajectory)
+    ref_fed = _fed(es=True, rpb=4, on_device=True, clients=4, cohort=3, rounds=16, lr=0.6)
+    _, _, recs = rounds_mod.host_reference_run(ref_fed, 16)
+    prev = np.full(4, np.inf)
+    for r in recs:
+        for i in np.where(r["valid"])[0]:
+            c = int(r["cohort"][i])
+            if r["combined"][i] > prev[c]:
+                stopped_at.setdefault(c, r["t"])
+            prev[c] = r["combined"][i]
+    for rec in hist.records:
+        for c, t_stop in stopped_at.items():
+            if rec.round > t_stop:
+                seen_stopped.add(c)
+        for c in rec.participants:
+            assert c not in seen_stopped, f"stopped client {c} re-selected at round {rec.round}"
+    assert fed.es_state.stopped.any()

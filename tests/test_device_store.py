@@ -1,0 +1,91 @@
+"""Device-resident client data: padding/stacking, index sampling, and
+cohort minibatch gathers must agree with the host numpy reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import device_store as ds
+
+
+def _client_data(ns, d=3, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, n in enumerate(ns):
+        out.append(
+            {
+                "train": {
+                    "x": rng.normal(size=(n, d)).astype(np.float32),
+                    "y": rng.integers(0, 5, n).astype(np.int32),
+                },
+                "test": {
+                    "x": rng.normal(size=(4, d)).astype(np.float32),
+                    "y": rng.integers(0, 5, 4).astype(np.int32),
+                },
+            }
+        )
+    return out
+
+
+def test_build_pads_and_stacks():
+    cd = _client_data([5, 9, 3])
+    store = ds.build_device_store(cd)
+    assert store.n_clients == 3
+    assert store.n_examples.tolist() == [5, 9, 3]
+    assert store.data["x"].shape == (3, 9, 3)
+    assert store.data["y"].shape == (3, 9)
+    # wrap padding: row i of a short client repeats its own examples
+    np.testing.assert_array_equal(
+        np.asarray(store.data["x"][0]), cd[0]["train"]["x"][np.arange(9) % 5]
+    )
+    # full-length client is stored verbatim
+    np.testing.assert_array_equal(np.asarray(store.data["x"][1]), cd[1]["train"]["x"])
+
+
+def test_sampled_indices_in_bounds():
+    cd = _client_data([5, 9, 3, 17])
+    store = ds.build_device_store(cd)
+    cohort = jnp.asarray([3, 0, 2])
+    idx = ds.sample_minibatch_indices(
+        jax.random.PRNGKey(0), store.n_examples[cohort], steps=4, batch=8
+    )
+    assert idx.shape == (3, 4, 8)
+    ns = np.asarray(store.n_examples[cohort])
+    for row, n in zip(np.asarray(idx), ns):
+        assert row.min() >= 0 and row.max() < n
+
+
+def test_gather_matches_numpy_reference():
+    cd = _client_data([6, 11, 4])
+    store = ds.build_device_store(cd)
+    cohort = np.array([2, 1])
+    idx = ds.sample_minibatch_indices(
+        jax.random.PRNGKey(7), store.n_examples[jnp.asarray(cohort)], steps=3, batch=5
+    )
+    got = ds.gather_cohort_batches(store, jnp.asarray(cohort), idx)
+    idx_np = np.asarray(idx)
+    for k in ("x", "y"):
+        want = np.stack(
+            [cd[c]["train"][k][idx_np[i]] for i, c in enumerate(cohort)]
+        )
+        np.testing.assert_array_equal(np.asarray(got[k]), want)
+
+
+def test_cohort_batches_shapes_and_determinism():
+    cd = _client_data([8, 8, 8])
+    store = ds.build_device_store(cd)
+    cohort = jnp.asarray([0, 2])
+    key = jax.random.PRNGKey(3)
+    a = ds.cohort_batches(store, cohort, key, steps=2, batch=4)
+    b = ds.cohort_batches(store, cohort, key, steps=2, batch=4)
+    assert a["x"].shape == (2, 2, 4, 3)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+def test_store_is_a_pytree():
+    cd = _client_data([4, 4])
+    store = ds.build_device_store(cd)
+    mapped = jax.tree.map(lambda x: x, store)
+    assert isinstance(mapped, ds.DeviceStore)
+    leaves = jax.tree.leaves(store)
+    assert len(leaves) == 3  # x, y, n_examples

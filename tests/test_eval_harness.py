@@ -1,0 +1,82 @@
+"""EvalHarness batched-eval machinery: ragged-tail chunking must match
+the per-client loop exactly, and the device test stack is uploaded once
+and reused (no per-call H2D of the test batches)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FLConfig
+from repro.launch import experiment
+from repro.models import cnn
+
+CFG = cnn.EMNIST_CNN
+
+
+def _fed(clients, batched=True, **kw):
+    fl = FLConfig(
+        n_clients=clients,
+        clients_per_round=min(4, clients),
+        max_rounds=2,
+        lr=0.05,
+        batch_size=4,
+        dirichlet_alpha=0.5,
+        seed=0,
+        batched_eval=batched,
+        **kw,
+    )
+    spec = experiment.ExperimentSpec(fl=fl, dataset=CFG, samples=60 * clients, steps_per_round=2)
+    return experiment.build_federation(spec)
+
+
+# EVAL_CHUNK is 8: 5 exercises the single ragged chunk, 11 a full chunk
+# plus a ragged tail of 3 (the index-clamp padding path).
+@pytest.mark.parametrize("clients", [5, 11])
+def test_ragged_tail_cohort_losses_match_per_client_loop(clients):
+    fed_b = _fed(clients, batched=True)
+    fed_u = _fed(clients, batched=False)
+    cohort = np.arange(clients)  # not a multiple of EVAL_CHUNK
+    lp = fed_b.local_params
+    got = fed_b.eval_harness.cohort_test_losses(lp, cohort)
+    want = fed_u.eval_harness.cohort_test_losses(fed_u.local_params, cohort)
+    assert got.shape == (clients,)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("clients", [5, 11])
+def test_ragged_tail_mean_accuracy_matches_per_client_loop(clients):
+    fed_b = _fed(clients, batched=True)
+    fed_u = _fed(clients, batched=False)
+    got = fed_b.eval_harness.mean_accuracy(fed_b.local_params, clients)
+    want = fed_u.eval_harness.mean_accuracy(fed_u.local_params, clients)
+    assert got == pytest.approx(want, rel=1e-5, abs=1e-6)
+
+
+def test_ragged_tail_subset_cohort():
+    """A cohort that is a strict subset (and unordered) still lines up
+    row i of the stacked params with client cohort[i]."""
+    fed_b = _fed(7, batched=True)
+    fed_u = _fed(7, batched=False)
+    cohort = np.array([6, 2, 5])  # 3 clients, EVAL_CHUNK=8 pads rows
+    lp = jax.tree.map(lambda x: x[jnp.asarray(cohort)], fed_b.local_params)
+    got = fed_b.eval_harness.cohort_test_losses(lp, cohort)
+    lp_u = jax.tree.map(lambda x: x[jnp.asarray(cohort)], fed_u.local_params)
+    want = fed_u.eval_harness.cohort_test_losses(lp_u, cohort)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_device_test_stack_cached():
+    """The [N, TEST_N, ...] test stack is uploaded to device once; later
+    eval calls reuse the same arrays (no re-upload per call)."""
+    fed = _fed(5)
+    h = fed.eval_harness
+    assert h._test_stack_dev is None
+    first = h.cohort_test_losses(fed.local_params, np.arange(5))
+    dev = h.test_stack_dev()
+    assert h._test_stack_dev is not None
+    second = h.cohort_test_losses(fed.local_params, np.arange(5))
+    assert h.test_stack_dev() is dev  # same cached dict, no rebuild
+    for k, v in dev.items():
+        assert isinstance(v, jax.Array)
+    np.testing.assert_allclose(first, second, rtol=0, atol=0)

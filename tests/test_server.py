@@ -12,7 +12,7 @@ from repro.models import cnn
 CFG = cnn.EMNIST_CNN
 
 
-def _server(method="fedspu", es=False, clients=6, rounds=4, seed=0):
+def _server(method="fedspu", es=False, clients=6, rounds=4, seed=0, p_clusters=None):
     fl = FLConfig(
         n_clients=clients,
         clients_per_round=min(4, clients),
@@ -23,6 +23,7 @@ def _server(method="fedspu", es=False, clients=6, rounds=4, seed=0):
         method=method,
         early_stopping=es,
         seed=seed,
+        **({"p_clusters": p_clusters} if p_clusters is not None else {}),
     )
     data = synthetic.make_classification_data(seed, 600, CFG.in_shape, CFG.n_classes)
     cd = partition.make_federated_dataset(seed, data, fl.n_clients, fl.dirichlet_alpha, fl.split_lambda)
@@ -63,14 +64,15 @@ def test_early_stopping_reduces_rounds():
 
 
 def test_comm_scales_with_p():
-    """A cohort with p=0.2 everywhere must communicate ~5x less than p=1."""
-    s = _server()
-    fl_small = s.fl
-    object.__setattr__(fl_small, "p_clusters", (0.2,))
+    """A cohort with p=0.2 everywhere must communicate ~5x less than p=1.
+
+    p_clusters is set at construction: per-client p_k ratios are hoisted
+    into a [n_clients] array when the federation is built (§Perf), so
+    post-hoc config mutation no longer reaches the round path."""
+    s = _server(p_clusters=(0.2,))
     s.run_round(0)
     low = s.history.records[-1].comm_gb
-    s2 = _server(seed=1)
-    object.__setattr__(s2.fl, "p_clusters", (1.0,))
+    s2 = _server(seed=1, p_clusters=(1.0,))
     s2.run_round(0)
     high = s2.history.records[-1].comm_gb
     # CNN masks: weight active iff BOTH endpoint neurons active (≈p²) but
