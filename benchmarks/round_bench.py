@@ -28,15 +28,27 @@ tightly per method). For the block entries the baseline is
 exact block semantics (same cohorts, same device-sampled batches), so
 the drift isolates the scan/cond/scatter machinery, not RNG differences.
 
+A fifth entry, ``sharded_block``, measures the client-axis-sharded block
+driver (docs/PERF.md "Sharded block rounds") at 1/2 forced host device
+counts. The XLA device count is locked at first jax init, so every
+device-count point runs in its own subprocess (``--sharded-worker``)
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``; drift is
+measured against the unsharded ``host_reference_run``.
+
 ``--smoke``: tiny-shape block-vs-reference run asserting
 ``max_abs_drift < 1e-5`` (scripts/bench.sh, CI perf-smoke job); writes
-nothing.
+nothing. When more than one device is present (CI forces 2), the smoke
+additionally gates the sharded driver against the same reference.
+``--sharded-only``: recompute just the ``sharded_block`` entry and merge
+it into an existing BENCH_round.json.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import subprocess
+import sys
 import time
 from contextlib import contextmanager
 
@@ -245,6 +257,129 @@ def bench_transformer_block(
 
 
 # ---------------------------------------------------------------------------
+# client-axis-sharded block driver (docs/PERF.md "Sharded block rounds")
+# ---------------------------------------------------------------------------
+
+def bench_sharded_worker(
+    *,
+    clients: int = 16,
+    cohort: int = 4,
+    steps: int = 1,
+    batch: int = 2,
+    rounds_per_block: int = 8,
+    blocks: int = 2,
+    test_n: int = 32,
+) -> dict:
+    """One device-count point of the ``sharded_block`` entry, run inside
+    the current process's device count (the parent forces it per
+    subprocess via XLA_FLAGS — the count is locked at first jax init,
+    same reason launch/dryrun.py is standalone).
+
+    Uses the vmap cohort layout so the K gathered clients actually
+    distribute over the data axis (the CPU-auto scan layout is
+    sequential per client — nothing for a second device to do); both
+    device counts use the same layout, so the scaling point is fair.
+    Drift is against the unsharded ``host_reference_run`` at the same
+    layout."""
+    d = jax.device_count()
+    expect = os.environ.get("ROUND_BENCH_EXPECT_DEVICES")
+    if expect is not None and int(expect) != d:
+        raise RuntimeError(
+            f"worker expected {expect} devices but sees {d} "
+            f"({jax.default_backend()} backend) — "
+            "--xla_force_host_platform_device_count only applies to the CPU "
+            "platform, so the sharded device-count sweep cannot run on this "
+            "backend; point it at real device subsets instead"
+        )
+    with _test_n(test_n):
+        flags = dict(
+            FUSED_FLAGS,
+            rounds_per_block=rounds_per_block,
+            cohort_layout="vmap",
+            mesh_shape=(d, 1),
+        )
+        fed = _cnn_server(flags, clients=clients, cohort=cohort, steps=steps, batch=batch)
+        block_s = _time_block_rounds(fed, blocks)
+        ref = _cnn_server(
+            dict(FUSED_FLAGS, rounds_per_block=rounds_per_block, cohort_layout="vmap"),
+            clients=clients, cohort=cohort, steps=steps, batch=batch,
+        )
+        gp_ref, _, _ = rounds_mod.host_reference_run(ref, rounds_per_block * (blocks + 1))
+        return dict(
+            devices=d,
+            block_s_per_round=block_s,
+            max_abs_drift=_drift(fed.global_params, gp_ref),
+            config=dict(
+                clients=clients, cohort=cohort, steps_per_round=steps, batch_size=batch,
+                rounds_per_block=rounds_per_block, blocks_timed=blocks, test_n=test_n,
+                mesh_shape=[d, 1], cohort_layout="vmap",
+            ),
+        )
+
+
+def bench_sharded_block(device_counts=(1, 2)) -> dict:
+    """Device-count scaling of the sharded block driver: one
+    ``--sharded-worker`` subprocess per count (forced host devices),
+    merged into ``{by_devices, scaling_vs_1dev, config}``."""
+    root = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+    src = os.path.join(root, "src")
+    by_devices = {}
+    for d in device_counts:
+        env = dict(
+            os.environ,
+            XLA_FLAGS=f"--xla_force_host_platform_device_count={d}",
+            # the flag above only affects the CPU platform; the worker
+            # fails loudly (instead of silently sweeping nothing) if the
+            # backend hands it a different device count
+            ROUND_BENCH_EXPECT_DEVICES=str(d),
+            PYTHONPATH=src + os.pathsep + os.environ.get("PYTHONPATH", ""),
+        )
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.round_bench", "--sharded-worker"],
+            cwd=root, env=env, capture_output=True, text=True, timeout=1800,
+        )
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"sharded worker (devices={d}) failed:\n{proc.stderr[-4000:]}"
+            )
+        by_devices[str(d)] = json.loads(proc.stdout.strip().splitlines()[-1])
+    base = by_devices[str(device_counts[0])]
+    return dict(
+        by_devices=by_devices,
+        scaling_vs_1dev={
+            k: base["block_s_per_round"] / v["block_s_per_round"]
+            for k, v in by_devices.items()
+        },
+        config=base["config"],
+    )
+
+
+def sharded_smoke(max_drift: float = 1e-5) -> dict:
+    """Tiny-shape sharded-vs-reference gate (runs when >1 device is
+    present — CI forces 2): the mesh'd block driver must match the
+    unsharded host reference replay."""
+    d = jax.device_count()
+    kw = dict(clients=4, cohort=2, steps=1, batch=2)
+    rpb, blocks = 4, 1
+    with _test_n(16):
+        fed = _cnn_server(
+            dict(FUSED_FLAGS, rounds_per_block=rpb, mesh_shape=(d, 1)), **kw
+        )
+        for b in range(blocks + 1):
+            fed.run_block(b * rpb)
+        ref = _cnn_server(dict(FUSED_FLAGS, rounds_per_block=rpb), **kw)
+        gp_ref, _, _ = rounds_mod.host_reference_run(ref, rpb * (blocks + 1))
+        res = dict(devices=d, max_abs_drift=_drift(fed.global_params, gp_ref))
+    print(json.dumps(res, indent=2))
+    assert res["max_abs_drift"] < max_drift, (
+        f"sharded block driver drifted {res['max_abs_drift']:.2e} from the "
+        f"host reference on {d} devices (allowed {max_drift:.0e})"
+    )
+    print(f"sharded smoke OK: max_abs_drift {res['max_abs_drift']:.2e} on {d} devices")
+    return res
+
+
+# ---------------------------------------------------------------------------
 # reduced transformer cohort through the jitted round engine
 # ---------------------------------------------------------------------------
 
@@ -305,7 +440,8 @@ def bench_transformer(rounds: int = 8, *, cohort: int = 4, steps: int = 2, batch
 
 def smoke(max_drift: float = 1e-5) -> dict:
     """Tiny-shape block-vs-reference equivalence gate (scripts/bench.sh,
-    CI perf-smoke). Asserts drift, prints, writes nothing."""
+    CI perf-smoke). Asserts drift, prints, writes nothing. With >1
+    device present, also gates the sharded driver (``sharded_smoke``)."""
     res = bench_cnn_block(
         clients=4, cohort=2, steps=1, batch=2, rounds_per_block=4, blocks=1, test_n=16
     )
@@ -315,6 +451,8 @@ def smoke(max_drift: float = 1e-5) -> dict:
         f"reference (allowed {max_drift:.0e})"
     )
     print(f"smoke OK: max_abs_drift {res['max_abs_drift']:.2e} < {max_drift:.0e}")
+    if jax.device_count() > 1:
+        res["sharded"] = sharded_smoke(max_drift)
     return res
 
 
@@ -324,6 +462,7 @@ def run() -> dict:
         "transformer_reduced": bench_transformer(),
         "block_fused": bench_cnn_block(),
         "transformer_block": bench_transformer_block(),
+        "sharded_block": bench_sharded_block(),
         "env": dict(backend=jax.default_backend(), devices=jax.device_count(), jax=jax.__version__),
     }
     rows = [
@@ -335,10 +474,19 @@ def run() -> dict:
             f"{v['max_abs_drift']:.2e}",
         ]
         for k, v in results.items()
-        if k != "env"
+        if k not in ("env", "sharded_block")
     ]
     print("\n== Round latency: baseline vs fused path (host/block) ==")
     print(common.fmt_table(rows, ["cohort", "base ms/round", "fused ms/round", "speedup", "max drift"]))
+    sb = results["sharded_block"]
+    print("\n== Sharded block driver: device-count scaling (vmap layout) ==")
+    print(common.fmt_table(
+        [
+            [d, f"{v['block_s_per_round'] * 1e3:.0f}", f"{sb['scaling_vs_1dev'][d]:.2f}x", f"{v['max_abs_drift']:.2e}"]
+            for d, v in sorted(sb["by_devices"].items(), key=lambda kv: int(kv[0]))
+        ],
+        ["devices", "ms/round", "scaling", "max drift"],
+    ))
     with open(OUT_PATH, "w") as f:
         json.dump(results, f, indent=2)
     print(f"wrote {os.path.normpath(OUT_PATH)}")
@@ -348,7 +496,31 @@ def run() -> dict:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true", help="tiny-shape drift gate; writes nothing")
+    ap.add_argument(
+        "--sharded-worker", action="store_true",
+        help="internal: one sharded device-count point at the current "
+        "device count; prints a JSON line (spawned by bench_sharded_block)",
+    )
+    ap.add_argument(
+        "--sharded-only", action="store_true",
+        help="recompute just the sharded_block entry and merge it into "
+        "an existing BENCH_round.json",
+    )
     args = ap.parse_args(argv)
+    if args.sharded_worker:
+        print(json.dumps(bench_sharded_worker()))
+        return 0
+    if args.sharded_only:
+        results = {}
+        if os.path.exists(OUT_PATH):
+            with open(OUT_PATH) as f:
+                results = json.load(f)
+        results["sharded_block"] = bench_sharded_block()
+        with open(OUT_PATH, "w") as f:
+            json.dump(results, f, indent=2)
+        print(json.dumps(results["sharded_block"], indent=2))
+        print(f"updated {os.path.normpath(OUT_PATH)}")
+        return 0
     if args.smoke:
         smoke()
         return 0

@@ -2,6 +2,8 @@
 # Perf smoke gate: runs benchmarks/round_bench.py at tiny shapes and
 # asserts the block-fused driver's max_abs_drift < 1e-5 against the
 # per-round host reference (repro.core.rounds.host_reference_run).
+# With >1 device present (CI sets XLA_FLAGS=--xla_force_host_platform_
+# device_count=2) the sharded-round gate runs too (sharded_smoke).
 # Wired into .github/workflows/ci.yml as the non-blocking perf-smoke
 # job so engine-math regressions surface on PRs without gating merges.
 # Usage: scripts/bench.sh [--full]   (--full regenerates BENCH_round.json)

@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Docs link checker (CI `docs` job; also run by tests/test_docs.py).
+
+Validates, over README.md and docs/*.md:
+
+  1. every intra-repo markdown link ``[text](target)`` resolves to an
+     existing file/directory (http(s)/mailto/pure-anchor links are
+     skipped; ``#anchor`` suffixes are stripped);
+  2. every ``path:line`` code reference (e.g.
+     ``src/repro/core/fedspu.py:90``) points at an existing file with at
+     least that many lines — so the paper-equation map in
+     docs/ARCHITECTURE.md can't silently rot.
+
+Exit 0 = clean; exit 1 prints one ``file: problem`` line per failure.
+No third-party deps, no jax import — safe for a bare CI runner.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# [text](target ...) — target may carry a "title" or be <bracketed>;
+# images' leading "!" resolve by the same rule
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
+# path/to/file.ext:123 — repo-relative source references
+PATH_LINE = re.compile(
+    r"\b((?:src|tests|benchmarks|scripts|examples|docs)/[\w./-]+"
+    r"\.(?:py|md|sh|toml|ini|yml|yaml|json)):(\d+)\b"
+)
+
+SKIP_SCHEMES = ("http://", "https://", "mailto:")
+
+
+def doc_files(root: Path = ROOT):
+    """README.md + every markdown file under docs/."""
+    files = [root / "README.md"]
+    files += sorted((root / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_file(md: Path, root: Path = ROOT):
+    """Yield 'problem' strings for one markdown file."""
+    text = md.read_text()
+    for m in MD_LINK.finditer(text):
+        # drop an optional link title, angle brackets, and any #anchor
+        target = m.group(1).strip().split()[0].strip("<>")
+        if target.startswith(SKIP_SCHEMES) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        # "/docs/x.md" is root-relative on GitHub, not filesystem-absolute
+        base = root if rel.startswith("/") else md.parent
+        resolved = (base / rel.lstrip("/")).resolve()
+        if not resolved.exists():
+            yield f"broken link: ({target})"
+    for m in PATH_LINE.finditer(text):
+        rel, line = m.group(1), int(m.group(2))
+        f = root / rel
+        if not f.exists():
+            yield f"path:line ref to missing file: {rel}:{line}"
+            continue
+        n_lines = len(f.read_text().splitlines())
+        if line > n_lines:
+            yield f"path:line ref past EOF ({n_lines} lines): {rel}:{line}"
+
+
+def main() -> int:
+    failures = []
+    files = doc_files()
+    for md in files:
+        for problem in check_file(md):
+            failures.append(f"{md.relative_to(ROOT)}: {problem}")
+    if failures:
+        print("\n".join(failures), file=sys.stderr)
+        print(f"\n{len(failures)} broken reference(s)", file=sys.stderr)
+        return 1
+    print(f"checked {len(files)} files: all links and path:line refs resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

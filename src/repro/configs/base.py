@@ -26,6 +26,8 @@ class BlockSpec:
 
 @dataclass(frozen=True)
 class Stage:
+    """A scanned repeat of a short heterogeneous block pattern."""
+
     pattern: Tuple[BlockSpec, ...]
     repeats: int
 
@@ -36,6 +38,8 @@ class Stage:
 
 @dataclass(frozen=True)
 class ModelConfig:
+    """One architecture: dims, stages, and §Perf / distribution knobs."""
+
     name: str
     family: str  # dense | moe | ssm | hybrid | vlm | audio | cnn
     d_model: int
@@ -107,6 +111,7 @@ class ModelConfig:
         return self.d_inner + 2 * self.ssm_ngroups * self.ssm_state
 
     def replace(self, **kw) -> "ModelConfig":
+        """A copy with ``kw`` fields swapped (frozen dataclass)."""
         return dataclasses.replace(self, **kw)
 
     # ------------------------------------------------------------------
@@ -168,6 +173,8 @@ def _block_params(cfg: ModelConfig, bs: BlockSpec, active_only: bool = False) ->
 
 @dataclass(frozen=True)
 class InputShape:
+    """An assigned workload shape (train / prefill / decode)."""
+
     name: str
     seq_len: int
     global_batch: int
@@ -226,6 +233,18 @@ class FLConfig:
     # defaults keep the host loop bit-for-bit.
     rounds_per_block: int = 1
     on_device_data: bool = False
+
+    # Client-axis sharding (docs/PERF.md "Sharded block rounds"): lay the
+    # resident [n_clients, ...] stacks (device store, local params, test
+    # stack, per-client constants, ES state) out over the ``client_axis``
+    # of a mesh and run the block driver under explicit in/out shardings.
+    # mesh_shape is (data,) or (data, model) sizes for a
+    # repro.launch.mesh.make_local_mesh; None (the default) keeps today's
+    # single-device placement bit-for-bit. n_clients that don't divide
+    # the client-axis size are wrap-padded with always-stopped phantom
+    # clients (never selected, sliced off on readback).
+    mesh_shape: Optional[Tuple[int, ...]] = None
+    client_axis: str = "data"
 
 
 def client_ratio(fl: FLConfig, client_id: int) -> float:

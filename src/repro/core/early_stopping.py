@@ -13,15 +13,19 @@ import numpy as np
 
 @dataclass
 class ESState:
+    """Per-client early-stopping state (Alg. 2): last L_t + stop mask."""
+
     prev_loss: np.ndarray  # [N] float, +inf before first participation
     stopped: np.ndarray  # [N] bool
 
     @staticmethod
     def init(n_clients: int) -> "ESState":
+        """Fresh state: no client stopped, prev losses at +inf."""
         return ESState(np.full(n_clients, np.inf), np.zeros(n_clients, bool))
 
     @property
     def all_stopped(self) -> bool:
+        """FL termination condition (Alg. 2 l.11)."""
         return bool(self.stopped.all())
 
 

@@ -48,6 +48,8 @@ ClientData = List[Dict[str, Dict[str, np.ndarray]]]
 
 @dataclass
 class RoundRecord:
+    """One round's history row: cohort, mean Eq. 6 losses, comm GB."""
+
     round: int
     participants: List[int]
     train_loss: float
@@ -59,6 +61,8 @@ class RoundRecord:
 
 @dataclass
 class FLHistory:
+    """A whole run's metrics: per-round records + final accuracy."""
+
     records: List[RoundRecord] = field(default_factory=list)
     final_accuracy: float = 0.0
     rounds_run: int = 0
@@ -141,6 +145,7 @@ class CohortSampler:
         self.rng = rng
 
     def select(self, pool: np.ndarray) -> np.ndarray:
+        """A uniform without-replacement cohort from ``pool`` (Alg. 1 l.3)."""
         k = min(self.fl.clients_per_round, len(pool))
         return self.rng.choice(pool, size=k, replace=False)
 
@@ -155,6 +160,8 @@ class CommMeter:
         self.total_gb = 0.0
 
     def round_gb(self, active_fracs) -> float:
+        """One round's up+down GB: sum of active fractions x model size x 2
+        (FedSPU's communication saving — paper Table 3)."""
         gb = float(
             np.sum(np.asarray(active_fracs, np.float64))
             * self.n_params
@@ -179,9 +186,18 @@ class EvalHarness:
     TEST_N = 128  # fixed eval-batch size: one jit shape for every client
     EVAL_CHUNK = 8  # clients per vmapped eval call (bounds activation mem)
 
-    def __init__(self, task: FederatedTask, client_data: ClientData, fl: FLConfig):
+    def __init__(
+        self,
+        task: FederatedTask,
+        client_data: ClientData,
+        fl: FLConfig,
+        mesh=None,
+        client_axis: str = "data",
+    ):
         self.client_data = client_data
         self.fl = fl
+        self.mesh = mesh
+        self.client_axis = client_axis
         self._loss_fn = jax.jit(task.flm.loss_fn)
         self._eval_fn = jax.jit(task.eval_fn)
         # Batched eval (§Perf): one jitted call over a client chunk instead
@@ -195,6 +211,7 @@ class EvalHarness:
 
     # -- test batches ---------------------------------------------------
     def test_batch_np(self, cid: int) -> Dict[str, np.ndarray]:
+        """Client ``cid``'s fixed TEST_N eval batch (host numpy)."""
         te = self.client_data[cid]["test"]
         n = schema.num_examples(te)
         rng = np.random.default_rng(10_000 + cid)
@@ -202,6 +219,7 @@ class EvalHarness:
         return {k: v[idx] for k, v in te.items()}
 
     def test_batch(self, cid: int):
+        """Client ``cid``'s eval batch on device (Eq. 6's test split)."""
         return {k: jnp.asarray(v) for k, v in self.test_batch_np(cid).items()}
 
     def _test_stack_all(self) -> Dict[str, np.ndarray]:
@@ -213,9 +231,23 @@ class EvalHarness:
 
     def test_stack_dev(self) -> Dict[str, jnp.ndarray]:
         """Device-resident ``[N, TEST_N, ...]`` test stack, uploaded once
-        and shared by every subsequent eval (and the block driver)."""
+        and shared by every subsequent eval (and the block driver). With
+        a mesh, rows are partitioned over the client axis (replicated
+        when ``n_clients`` doesn't divide it — the sharded block driver
+        pads its own copy instead)."""
         if self._test_stack_dev is None:
-            self._test_stack_dev = {k: jnp.asarray(v) for k, v in self._test_stack_all().items()}
+            stack = self._test_stack_all()
+            if self.mesh is not None:
+                from repro.launch import shardings as sh
+
+                shards = sh.client_stack_shardings(
+                    self.mesh, stack, client_axes=self.client_axis
+                )
+                self._test_stack_dev = {
+                    k: jax.device_put(v, shards[k]) for k, v in stack.items()
+                }
+            else:
+                self._test_stack_dev = {k: jnp.asarray(v) for k, v in stack.items()}
             self._test_stack = None  # host copy is dead once uploaded
         return self._test_stack_dev
 
@@ -277,12 +309,15 @@ class RoundCallback:
     """
 
     def should_terminate(self, fed: "Federation") -> bool:
+        """Checked at round start; any True ends the run."""
         return False
 
     def filter_pool(self, fed: "Federation", pool: np.ndarray) -> np.ndarray:
+        """Narrow the candidate client pool before cohort sampling."""
         return pool
 
     def on_round_end(self, fed: "Federation", t: int, cohort: np.ndarray, combined: np.ndarray) -> None:
+        """Observe round ``t``'s cohort and combined Eq. 6 losses."""
         pass
 
 
@@ -297,12 +332,15 @@ class EarlyStoppingCallback(RoundCallback):
         self.state = es.ESState.init(n_clients)
 
     def should_terminate(self, fed: "Federation") -> bool:
+        """FL ends when every client has stopped (Alg. 2 l.11)."""
         return self.state.all_stopped
 
     def filter_pool(self, fed: "Federation", pool: np.ndarray) -> np.ndarray:
+        """Stopped clients leave the FL pool (Alg. 2 l.9)."""
         return pool[~self.state.stopped[pool]]
 
     def on_round_end(self, fed: "Federation", t: int, cohort: np.ndarray, combined: np.ndarray) -> None:
+        """Apply the stop rule L_t > L_{t-1} for the round's cohort."""
         self.state = es.update(self.state, cohort, combined)
 
 
@@ -343,6 +381,17 @@ class Federation:
         self.steps_per_round = steps_per_round
         self.strategy = resolve_strategy(strategy if strategy is not None else fl.method)
         self.rng = np.random.default_rng(fl.seed)
+        # Client-axis sharding (docs/PERF.md "Sharded block rounds"):
+        # fl.mesh_shape builds a ("data", "model") mesh and every
+        # [n_clients, ...] resident stack below is laid out over
+        # fl.client_axis; None keeps single-device placement bit-for-bit.
+        # lazy import: repro.launch sits above repro.core in the layer
+        # map, so core only touches it when the knob is actually set.
+        self.mesh = None
+        if fl.mesh_shape is not None:
+            from repro.launch.mesh import mesh_for_fl
+
+            self.mesh = mesh_for_fl(fl)
         key = jax.random.PRNGKey(fl.seed)
         self.global_params = task.init_fn(key)
         # every client starts from the broadcast initial model (Alg. 1 l.1)
@@ -353,7 +402,9 @@ class Federation:
         n_params = sum(x.size for x in jax.tree.leaves(self.global_params))
         self.sampler = CohortSampler(fl, self.rng)
         self.comm = CommMeter(n_params, param_bytes)
-        self.eval_harness = EvalHarness(task, client_data, fl)
+        self.eval_harness = EvalHarness(
+            task, client_data, fl, mesh=self.mesh, client_axis=fl.client_axis
+        )
         # Hoisted per-client constants (§Perf): p_k and the n_k weights
         # used to be rebuilt as python list comprehensions every round;
         # both paths now index into these [n_clients] device arrays.
@@ -361,6 +412,18 @@ class Federation:
         self.weights_all = jnp.asarray(
             [schema.num_examples(client_data[c]["train"]) for c in range(n)], jnp.float32
         )
+        if self.mesh is not None:
+            # partition the client-stacked residents over the client axis
+            # (per-leaf: leaves whose leading dim doesn't divide the axis
+            # stay replicated — the block driver pads its own copies)
+            from repro.launch import shardings as sh
+
+            put = lambda t: jax.device_put(
+                t, sh.client_stack_shardings(self.mesh, t, client_axes=fl.client_axis)
+            )
+            self.local_params = put(self.local_params)
+            self.p_ratios_all = put(self.p_ratios_all)
+            self.weights_all = put(self.weights_all)
         # Block-fused rounds (docs/PERF.md): scan-over-rounds driver with
         # device-resident data. rounds_per_block == 1 without
         # on_device_data keeps the legacy host loop (bit-for-bit,
@@ -424,6 +487,7 @@ class Federation:
     # -- component views ------------------------------------------------
     @property
     def flm(self) -> fedspu.FLModel:
+        """The task's engine plumbing bundle (loss, masks, importance)."""
         return self.task.flm
 
     @property
@@ -526,10 +590,14 @@ class Federation:
                 fl=self.fl,
                 steps_per_round=self.steps_per_round,
                 layout=self.cohort_layout,
-                store=device_store.build_device_store(self.client_data),
+                store=device_store.build_device_store(
+                    self.client_data, mesh=self.mesh, client_axis=self.fl.client_axis
+                ),
                 test_stack=self.eval_harness.test_stack_dev(),
                 p_ratios_all=self.p_ratios_all,
                 weights_all=self.weights_all,
+                mesh=self.mesh,
+                client_axis=self.fl.client_axis,
                 # ES mirrors the host loop: driven by the installed
                 # callbacks, not the raw fl.early_stopping flag
                 es_enabled=any(
@@ -611,6 +679,9 @@ class Federation:
         return self.eval_harness.mean_accuracy(self.local_params, n)
 
     def run(self, rounds: Optional[int] = None, eval_every: int = 0) -> FLHistory:
+        """Run FL to ``rounds`` (Alg. 1): the host loop per round, or the
+        block-fused driver when ``fl.rounds_per_block``/``on_device_data``
+        select it. Returns the populated ``FLHistory``."""
         rounds = self.fl.max_rounds if rounds is None else rounds
         if self._use_block:
             return self._run_blocks(rounds, eval_every)

@@ -264,6 +264,7 @@ def fl_round_scan(flm: FLModel, global_params, locals_stacked, keys, p_ratios, b
 
 
 def bind_cnn(cfg) -> FLModel:
+    """FLModel plumbing for the paper's CNN track (EMNIST/CIFAR/Speech)."""
     from repro.models import cnn
 
     unit_counts, expand, importance = cnn.mask_spec(cfg)
@@ -277,6 +278,7 @@ def bind_cnn(cfg) -> FLModel:
 
 
 def bind_transformer(cfg) -> FLModel:
+    """FLModel plumbing for the LM track (any assigned ModelConfig)."""
     from repro.models import model as tmodel
 
     unit_counts, expand, importance = tmodel.mask_spec(cfg)

@@ -31,6 +31,18 @@ and minibatch indices. Keys depend only on the *absolute* round index,
 so trajectories are invariant to ``rounds_per_block`` — but they differ
 from the legacy numpy sampler stream (docs/PERF.md "Block-fused
 rounds").
+
+Sharding (docs/PERF.md "Sharded block rounds"): with a ``mesh``, every
+``[N, ...]`` resident stack (device store, local-param store, test
+stack, p_k / n_k constants, ES state) is partitioned over the mesh's
+client axis and the block fn is jitted with explicit in/out shardings —
+per-client compute stays shard-local and GSPMD inserts the collectives
+(cohort gathers, the Fig. 9 all-reduce) at the aggregation step. Client
+counts that don't divide the axis are wrap-padded with phantom clients
+that start ``stopped`` and have their cohort scores sunk, so they are
+never selected; cohort scores are always drawn at the *real* ``(N,)``
+shape (threefry bits depend on the total shape) so the sharded
+trajectory is the unsharded one exactly.
 """
 from __future__ import annotations
 
@@ -73,10 +85,12 @@ class BlockResult:
 
     @property
     def rounds_executed(self) -> int:
+        """How many scheduled rounds actually ran (a prefix of the block)."""
         return int(self.executed.sum())
 
     @property
     def all_stopped(self) -> bool:
+        """True when every client early-stopped (Alg. 2 termination)."""
         return bool(self.stopped.all())
 
 
@@ -101,17 +115,43 @@ class BlockRunner:
         p_ratios_all,
         weights_all,
         es_enabled: Optional[bool] = None,
+        mesh=None,
+        client_axis: str = "data",
     ):
         if fl.rounds_per_block < 1:
             raise ValueError(f"rounds_per_block must be >= 1, got {fl.rounds_per_block}")
         self.fl = fl
         self.R = fl.rounds_per_block
+        self.mesh = mesh
+        self.client_axis = client_axis
+
+        N, K, R = fl.n_clients, fl.clients_per_round, fl.rounds_per_block
+        # Client-axis sharding: N wrap-padded to the axis size; phantom
+        # clients start stopped / score-sunk and are sliced off readback.
+        N_pad = ds.padded_n_clients(N, mesh, client_axis)
+        self.N, self.N_pad = N, N_pad
+        if store.n_clients != N_pad:
+            raise ValueError(
+                f"device store holds {store.n_clients} client rows, expected "
+                f"{N_pad} (n_clients {N} padded for the mesh) — build it with "
+                f"the same mesh/client_axis"
+            )
+        row_shard = None
+        self._row_shard = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            row_shard = NamedSharding(mesh, P(client_axis))
+            rep_shard = NamedSharding(mesh, P())
+            pad = lambda x: ds.wrap_pad_rows(x, N_pad)
+            test_stack = {k: jax.device_put(pad(v), row_shard) for k, v in test_stack.items()}
+            p_ratios_all = jax.device_put(pad(p_ratios_all), row_shard)
+            weights_all = jax.device_put(pad(weights_all), row_shard)
+            self._row_shard = row_shard
         self.store = store
         self.test_stack = test_stack
         self.p_ratios_all = p_ratios_all
         self.weights_all = weights_all
-
-        N, K, R = fl.n_clients, fl.clients_per_round, fl.rounds_per_block
         lam = fl.split_lambda
         # ES is a property of the installed callbacks, not the raw config
         # flag (the host loop early-stops iff an EarlyStoppingCallback is
@@ -129,17 +169,43 @@ class BlockRunner:
             top-k of jax.random scores with stopped clients sunk below
             every active score. Slots past the active-pool size are
             flagged invalid (their effects are masked out downstream).
-            ``stopped=None`` means the pool is statically full (no ES)."""
+            ``stopped=None`` means the pool is statically full (no ES).
+
+            Scores are always drawn at the real ``(N,)`` shape — threefry
+            bits depend on the total shape, so drawing ``(N_pad,)`` would
+            change the trajectory — and phantom pad rows get a sunk -1
+            score (below every uniform draw AND tied with stopped
+            clients only on already-invalid slots)."""
             key = jax.random.split(jax.random.fold_in(data_base, t))[0]
             scores = jax.random.uniform(key, (N,))
+            if N_pad != N:
+                scores = jnp.concatenate([scores, jnp.full((N_pad - N,), -1.0)])
             if stopped is None:
                 _, cohort = jax.lax.top_k(scores, K)
                 return cohort.astype(jnp.int32), jnp.ones((K,), bool)
             scores = jnp.where(stopped, -1.0, scores)
             _, cohort = jax.lax.top_k(scores, K)
+            # stopped is [N_pad] with phantom rows always-True, so the
+            # active count is over real clients only
             n_active = jnp.sum((~stopped).astype(jnp.int32))
             valid = jnp.arange(K, dtype=jnp.int32) < jnp.minimum(K, n_active)
             return cohort.astype(jnp.int32), valid
+
+        # Cohort-axis sharding constraint (vmap layout only: the scan
+        # layout is sequential over clients, nothing to distribute): when
+        # the K gathered clients divide the client axis, pin them across
+        # shards so local SGD runs K/D clients per device and the Fig. 9
+        # aggregation lowers to per-shard sums + an all-reduce.
+        _constrain = None
+        if (
+            mesh is not None
+            and layout != "scan"
+            and K % mesh.shape[client_axis] == 0
+        ):
+            def _constrain(tree):
+                return jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(x, row_shard), tree
+                )
 
         def train_eval(t, gp, locals_c, cohort, valid, store, test_stack, p_all, w_all):
             """The expensive part of one round: cohort minibatch gather,
@@ -151,6 +217,9 @@ class BlockRunner:
             p_ratios = p_all[cohort]
             weights = jnp.where(valid, w_all[cohort], 0.0)
             batches = ds.cohort_batches(store, cohort, batch_key, steps, batch)
+            if _constrain is not None:
+                locals_c = _constrain(locals_c)
+                batches = _constrain(batches)
             new_g, new_l, losses, fracs = round_fn(
                 flm, gp, locals_c, keys, p_ratios, batches, weights,
                 strategy, fl.lr, compact=fl.compact_agg,
@@ -239,8 +308,30 @@ class BlockRunner:
             return gp, local_store, prev, stopped, outs
 
         donate = (2, 3, 4, 5) if fl.donate_buffers else ()
-        self._jit_full = jax.jit(block_full, donate_argnums=donate)
-        self._jit_gated = jax.jit(block_gated, donate_argnums=donate)
+        if mesh is None:
+            self._jit_full = jax.jit(block_full, donate_argnums=donate)
+            self._jit_gated = jax.jit(block_gated, donate_argnums=donate)
+        else:
+            # Explicit block-boundary shardings: global params replicated
+            # (every shard aggregates into the same model), everything
+            # client-stacked partitioned over the client axis. GSPMD owns
+            # the interior collectives.
+            in_sh = (
+                rep_shard, rep_shard,  # t0, t_limit
+                rep_shard,             # global params
+                row_shard,             # local-param store [N_pad, ...]
+                row_shard, row_shard,  # prev_loss, stopped [N_pad]
+                row_shard,             # device store
+                row_shard,             # test stack
+                row_shard, row_shard,  # p_ratios_all, weights_all
+            )
+            out_sh = (rep_shard, row_shard, row_shard, row_shard, rep_shard)
+            self._jit_full = jax.jit(
+                block_full, donate_argnums=donate, in_shardings=in_sh, out_shardings=out_sh
+            )
+            self._jit_gated = jax.jit(
+                block_gated, donate_argnums=donate, in_shardings=in_sh, out_shardings=out_sh
+            )
         self._es_enabled = es_enabled
 
     # ------------------------------------------------------------------
@@ -258,14 +349,32 @@ class BlockRunner:
             t_limit = 2**31 - 1
         full = (not self._es_enabled) and t_start + self.R <= t_limit
         fn = self._jit_full if full else self._jit_gated
+        prev_loss = np.asarray(prev_loss, np.float32)
+        stopped = np.asarray(stopped, bool)
+        if self.N_pad != self.N:
+            # phantom pad clients: params wrap real rows (benign garbage —
+            # only ever touched on invalid slots), start stopped with an
+            # inf prev loss, never selected, sliced off below. This
+            # per-block pad/slice round-trip of the local store only
+            # exists for non-divisible remainders; divisible counts pass
+            # the store straight through.
+            pad = self.N_pad - self.N
+            local_store = jax.tree.map(
+                lambda s: ds.wrap_pad_rows(s, self.N_pad), local_store
+            )
+            prev_loss = np.concatenate([prev_loss, np.full(pad, np.inf, np.float32)])
+            stopped = np.concatenate([stopped, np.ones(pad, bool)])
+            # the concat result is committed with the incoming layout;
+            # jit's in_shardings only accepts matching/uncommitted args
+            local_store = jax.device_put(local_store, self._row_shard)
         t0 = time.perf_counter()
         out = fn(
             jnp.asarray(t_start, jnp.int32),
             jnp.asarray(t_limit, jnp.int32),
             global_params,
             local_store,
-            jnp.asarray(np.asarray(prev_loss), jnp.float32),
-            jnp.asarray(np.asarray(stopped)),
+            jnp.asarray(prev_loss),
+            jnp.asarray(stopped),
             self.store,
             self.test_stack,
             self.p_ratios_all,
@@ -274,6 +383,10 @@ class BlockRunner:
         jax.block_until_ready(out)
         wall = time.perf_counter() - t0
         gp, local_store, prev, stopped_out, m = out
+        if self.N_pad != self.N:
+            local_store = jax.tree.map(lambda s: s[: self.N], local_store)
+            prev = prev[: self.N]
+            stopped_out = stopped_out[: self.N]
         result = BlockResult(
             executed=np.asarray(m["executed"]),
             cohorts=np.asarray(m["cohort"]),

@@ -42,6 +42,7 @@ class DeviceStore:
 
     @property
     def n_clients(self) -> int:
+        """Client rows in the store (the padded count under a mesh)."""
         return int(self.n_examples.shape[0])
 
     def tree_flatten(self):
@@ -53,20 +54,75 @@ class DeviceStore:
         return cls(dict(zip(keys, leaves[:-1])), leaves[-1])
 
 
-def build_device_store(client_data: Sequence[Dict], split: str = "train") -> DeviceStore:
+def padded_n_clients(n_clients: int, mesh=None, client_axis: str = "data") -> int:
+    """Client count wrap-padded up to a multiple of the mesh's
+    ``client_axis`` size (identity when ``mesh`` is None)."""
+    if mesh is None:
+        return n_clients
+    d = mesh.shape[client_axis]
+    return -(-n_clients // d) * d
+
+
+def pad_client_ids(n_clients: int, n_pad: int) -> np.ndarray:
+    """THE wrap-padding rule — phantom row ``i`` holds client ``i % N``.
+    Every client-stacked resident (store, params, test stack, constants)
+    must pad with this same rule for the sharded-vs-unsharded
+    equivalence to hold; use this helper, don't re-derive it."""
+    return np.arange(n_pad) % n_clients
+
+
+def wrap_pad_rows(x, n_pad: int):
+    """Wrap-pad a device-resident ``[N, ...]`` stack to ``[n_pad, ...]``
+    rows using the ``pad_client_ids`` rule (identity when already
+    padded)."""
+    n = x.shape[0]
+    if n_pad == n:
+        return x
+    tail = jnp.asarray(pad_client_ids(n, n_pad)[n:])
+    return jnp.concatenate([jnp.asarray(x), jnp.asarray(x)[tail]])
+
+
+def build_device_store(
+    client_data: Sequence[Dict],
+    split: str = "train",
+    *,
+    mesh=None,
+    client_axis: str = "data",
+) -> DeviceStore:
     """Pad/stack every client's ``split`` shard to ``[N, max_n, ...]`` and
-    upload once. Clients shorter than ``max_n`` are wrap-padded."""
+    upload once. Clients shorter than ``max_n`` are wrap-padded.
+
+    With a ``mesh``, the client axis is wrap-padded (row ``i % N``) up to
+    a multiple of the ``client_axis`` size and every stack is uploaded
+    with a ``NamedSharding`` partitioning dim 0 over that axis — the
+    sharded block driver's resident layout (docs/PERF.md "Sharded block
+    rounds"). Padded phantom rows hold real clients' data but are never
+    selected into a cohort (repro.core.rounds sinks their scores)."""
     ns = [schema.num_examples(cd[split]) for cd in client_data]
+    n = len(client_data)
+    n_pad = padded_n_clients(n, mesh, client_axis)
+    client_ids = pad_client_ids(n, n_pad)
     max_n = max(ns)
     fields = list(client_data[0][split])
     stacks = {}
     for k in fields:
         rows = [
-            np.take(cd[split][k], np.arange(max_n) % n, axis=0)
-            for cd, n in zip(client_data, ns)
+            np.take(client_data[c][split][k], np.arange(max_n) % ns[c], axis=0)
+            for c in client_ids
         ]
-        stacks[k] = jnp.asarray(np.stack(rows))
-    return DeviceStore(stacks, jnp.asarray(ns, jnp.int32))
+        stacks[k] = np.stack(rows)
+    n_examples = np.asarray([ns[c] for c in client_ids], np.int32)
+    if mesh is None:
+        return DeviceStore(
+            {k: jnp.asarray(v) for k, v in stacks.items()}, jnp.asarray(n_examples)
+        )
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    row = NamedSharding(mesh, P(client_axis))
+    return DeviceStore(
+        {k: jax.device_put(v, row) for k, v in stacks.items()},
+        jax.device_put(n_examples, row),
+    )
 
 
 def sample_minibatch_indices(key, n_examples, steps: int, batch: int):
@@ -96,6 +152,9 @@ def cohort_batches(store: DeviceStore, cohort, key, steps: int, batch: int):
 
 __all__: List[str] = [
     "DeviceStore",
+    "padded_n_clients",
+    "pad_client_ids",
+    "wrap_pad_rows",
     "build_device_store",
     "sample_minibatch_indices",
     "gather_cohort_batches",

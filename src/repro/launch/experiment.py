@@ -52,6 +52,7 @@ class ExperimentSpec:
     data_seed: Optional[int] = None  # defaults to fl.seed
 
     def dataset_name(self) -> str:
+        """Stable name of the dataset/config for history payloads."""
         if isinstance(self.dataset, str):
             return self.dataset
         return self.dataset.name
@@ -69,6 +70,7 @@ def _resolve_dataset(dataset) -> Union[cnn.CNNConfig, ModelConfig]:
 
 
 def build_task(spec: ExperimentSpec) -> FederatedTask:
+    """The spec's FederatedTask (CNN track or LM track)."""
     cfg = _resolve_dataset(spec.dataset)
     if isinstance(cfg, cnn.CNNConfig):
         return FederatedTask.from_cnn(cfg)
@@ -131,6 +133,7 @@ def run(spec: ExperimentSpec, out_path: Optional[str] = None, **kw) -> Dict[str,
 
 
 def main(argv=None) -> int:
+    """CLI: config -> federation -> history JSON (see module docstring)."""
     from repro.strategies import available_strategies
 
     ap = argparse.ArgumentParser(description="config → federation → history JSON")
@@ -156,8 +159,22 @@ def main(argv=None) -> int:
         help="device-resident client data + jax.random minibatch sampling "
         "even at rounds-per-block=1",
     )
+    ap.add_argument(
+        "--mesh-data", type=int, default=0,
+        help="shard the round path's client stacks over a data axis of "
+        "this size (0 = no mesh, single-device placement; on CPU force "
+        "host devices with XLA_FLAGS=--xla_force_host_platform_device_count=N "
+        "— see docs/PERF.md 'Sharded block rounds')",
+    )
+    ap.add_argument(
+        "--mesh-model", type=int, default=1,
+        help="model (TP) axis size of the mesh (with --mesh-data)",
+    )
     ap.add_argument("--out", default=None, help="write history JSON here")
     args = ap.parse_args(argv)
+    if args.mesh_model != 1 and not args.mesh_data:
+        ap.error("--mesh-model requires --mesh-data (the mesh is only built "
+                 "when a data-axis size is given)")
 
     spec = ExperimentSpec(
         fl=FLConfig(
@@ -172,6 +189,7 @@ def main(argv=None) -> int:
             seed=args.seed,
             rounds_per_block=args.rounds_per_block,
             on_device_data=args.on_device_data,
+            mesh_shape=(args.mesh_data, args.mesh_model) if args.mesh_data else None,
         ),
         dataset=args.dataset,
         samples=args.samples,

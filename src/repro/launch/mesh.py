@@ -36,6 +36,7 @@ def make_abstract_mesh(shape, axes):
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    """The 256-chip (16,16) pod mesh, or (2,16,16) with ``multi_pod``."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return _make_mesh(shape, axes)
@@ -46,12 +47,44 @@ def make_local_mesh(data: int = 1, model: int = 1):
     return _make_mesh((data, model), ("data", "model"))
 
 
+def mesh_for_fl(fl):
+    """Mesh for a federated run: ``FLConfig.mesh_shape`` sizes on the
+    ("data", "model") axes of a local mesh (None when unset — the
+    single-device round path). The round engine shards the client axis
+    (``fl.client_axis``) only; the model axis is reserved for TP."""
+    if fl.mesh_shape is None:
+        return None
+    shape = tuple(int(s) for s in fl.mesh_shape)
+    if not 1 <= len(shape) <= 2 or any(s < 1 for s in shape):
+        raise ValueError(
+            f"mesh_shape must be (data,) or (data, model) positive sizes, got {fl.mesh_shape}"
+        )
+    if len(shape) == 1:
+        shape = shape + (1,)
+    need = shape[0] * shape[1]
+    have = jax.device_count()
+    if need > have:
+        raise ValueError(
+            f"mesh_shape {fl.mesh_shape} needs {need} devices but only {have} "
+            f"are present; on CPU force host devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            f"(before the first jax import)"
+        )
+    mesh = make_local_mesh(*shape)
+    if fl.client_axis not in mesh.axis_names:
+        raise ValueError(
+            f"client_axis {fl.client_axis!r} not in mesh axes {mesh.axis_names}"
+        )
+    return mesh
+
+
 def data_axes(mesh) -> tuple:
     """The client/batch axes of a mesh: ("pod","data") or ("data",)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
 def axis_size(mesh, *names) -> int:
+    """Product of the named axes' sizes (absent names count as 1)."""
     n = 1
     for a in names:
         if a in mesh.axis_names:

@@ -178,9 +178,29 @@ def cache_shardings(mesh: Mesh, tree, *, batch_axes, seq_axis: Optional[str] = "
     return jax.tree_util.tree_map_with_path(one, tree)
 
 
+def client_stack_shardings(mesh: Mesh, tree, *, client_axes="data"):
+    """NamedShardings placing the leading (client) dim of every leaf on
+    ``client_axes`` — the layout of the round path's resident
+    ``[n_clients, ...]`` stacks (device store, local-param store, test
+    stack, per-client constants). Leaves whose leading dim doesn't
+    divide the axes (or scalars) stay replicated."""
+    if isinstance(client_axes, str):
+        client_axes = (client_axes,)
+
+    def one(leaf):
+        if getattr(leaf, "ndim", 0) >= 1 and _shardable(leaf.shape[0], mesh, client_axes):
+            return NamedSharding(mesh, P(client_axes))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, tree)
+
+
 def replicated(mesh: Mesh, tree):
+    """Fully-replicated NamedShardings matching ``tree`` (e.g. the global
+    model the Fig. 9 aggregation all-reduces into)."""
     return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
 
 
 def cohort_axes(mesh: Mesh) -> tuple:
+    """Mesh axes the FL cohort (client batch) rides on."""
     return data_axes(mesh)

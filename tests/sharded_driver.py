@@ -1,0 +1,129 @@
+"""Subprocess driver for the sharded-round equivalence test.
+
+``tests/test_shardings.py::test_sharded_block_matches_unsharded`` runs
+this script in its own process with
+``XLA_FLAGS=--xla_force_host_platform_device_count=2`` (the XLA device
+count is locked at first jax init, so the forced 2-device CPU backend
+cannot be set up inside the pytest process). The script runs, for every
+registered method, the block driver sharded over ``make_local_mesh
+(data=2)`` (via ``FLConfig(mesh_shape=(2, 1))``) and unsharded, plus a
+mid-block early-stopping case, a wrap-padded case (n_clients that
+doesn't divide the axis), a vmap-cohort-layout case, and a legacy
+host-loop case with sharded residents — and prints one JSON object of
+per-case drifts/cohort comparisons on the last stdout line.
+
+Not a pytest file: no ``test_`` prefix, safe to collect nothing from.
+"""
+import json
+
+import jax
+import numpy as np
+
+from repro.configs import FLConfig
+from repro.core import fedspu
+from repro.launch import experiment
+from repro.models import cnn
+
+
+def _fed(mesh=None, method="fedspu", es=False, clients=4, cohort=2, rounds=4,
+         rpb=2, lr=0.05, layout="auto", on_device=True):
+    fl = FLConfig(
+        n_clients=clients, clients_per_round=cohort, max_rounds=rounds, lr=lr,
+        batch_size=4, dirichlet_alpha=0.5, method=method, early_stopping=es,
+        seed=0, rounds_per_block=rpb, on_device_data=on_device,
+        cohort_layout=layout, mesh_shape=mesh,
+    )
+    spec = experiment.ExperimentSpec(
+        fl=fl, dataset=cnn.EMNIST_CNN, samples=40 * clients, steps_per_round=2
+    )
+    return experiment.build_federation(spec)
+
+
+def _drift(a, b):
+    """Max |Δ| over leaves, NaN-aware: positions NaN in BOTH trees count
+    as zero drift (a divergent-lr ES case NaNs identically on both
+    paths); a NaN on one side only is flagged as a mismatch."""
+    worst, nan_mismatch = 0.0, False
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        x = np.asarray(x, np.float32)
+        y = np.asarray(y, np.float32)
+        both_nan = np.isnan(x) & np.isnan(y)
+        nan_mismatch |= bool((np.isnan(x) ^ np.isnan(y)).any())
+        d = np.abs(x - y)
+        d[both_nan] = 0.0
+        worst = max(worst, float(np.nanmax(d)) if d.size else 0.0)
+    return worst, nan_mismatch
+
+
+def _run_blocks(fed, rounds):
+    """Drive run_block directly (skips the final full-pool evaluate that
+    fed.run() would compile — not what this check is about)."""
+    t = 0
+    while t < rounds:
+        if any(cb.should_terminate(fed) for cb in fed.callbacks):
+            break
+        n = fed.run_block(t, limit=rounds)
+        if n < fed.fl.rounds_per_block:
+            break
+        t += fed.fl.rounds_per_block
+    return fed
+
+
+def _compare(**kw):
+    rounds = kw.pop("rounds", 4)
+    base = _run_blocks(_fed(mesh=None, rounds=rounds, **kw), rounds)
+    shard = _run_blocks(_fed(mesh=(2, 1), rounds=rounds, **kw), rounds)
+    gp_drift, gp_nan = _drift(base.global_params, shard.global_params)
+    lp_drift, lp_nan = _drift(base.local_params, shard.local_params)
+    return dict(
+        gp_drift=gp_drift,
+        lp_drift=lp_drift,
+        nan_mismatch=gp_nan or lp_nan,
+        cohorts_equal=[r.participants for r in base.history.records]
+        == [r.participants for r in shard.history.records],
+        rounds_equal=base.history.rounds_run == shard.history.rounds_run,
+        stopped_equal=bool(
+            (base.es_state.stopped == shard.es_state.stopped).all()
+        ),
+    )
+
+
+def main():
+    assert jax.device_count() >= 2, (
+        f"driver needs >= 2 devices, got {jax.device_count()} — run with "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=2"
+    )
+    results = {}
+    for method in fedspu.METHODS:
+        results[method] = _compare(method=method)
+    # mid-block early stopping: divergent lr stops clients inside a block
+    results["es_mid_block"] = _compare(es=True, clients=4, cohort=4, rounds=12, rpb=3, lr=0.6)
+    # wrap-padded client axis: 5 clients over 2 devices
+    results["padded_clients"] = _compare(clients=5, cohort=3)
+    # padded + ES: phantom rows must not disturb the stop bookkeeping
+    results["padded_es"] = _compare(clients=5, cohort=3, es=True, rounds=8, rpb=3, lr=0.6)
+    # vmap cohort layout (the accelerator layout: K clients spatial,
+    # distributed over the data axis by the sharding constraint)
+    results["vmap_layout"] = _compare(layout="vmap", cohort=2)
+    # legacy host loop with sharded residents (numpy sampler; gathers and
+    # scatters cross shards under GSPMD)
+    hb = _fed(mesh=None, rpb=1, on_device=False)
+    hs = _fed(mesh=(2, 1), rpb=1, on_device=False)
+    for t in range(4):
+        hb.run_round(t)
+        hs.run_round(t)
+    gp_drift, gp_nan = _drift(hb.global_params, hs.global_params)
+    results["host_loop"] = dict(
+        gp_drift=gp_drift,
+        lp_drift=_drift(hb.local_params, hs.local_params)[0],
+        nan_mismatch=gp_nan,
+        cohorts_equal=[r.participants for r in hb.history.records]
+        == [r.participants for r in hs.history.records],
+        rounds_equal=True,
+        stopped_equal=True,
+    )
+    print(json.dumps(results))
+
+
+if __name__ == "__main__":
+    main()
