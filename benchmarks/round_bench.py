@@ -35,16 +35,28 @@ device-count point runs in its own subprocess (``--sharded-worker``)
 with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``; drift is
 measured against the unsharded ``host_reference_run``.
 
+A sixth entry, ``fault_overhead``, prices the fault-injection machinery
+(docs/ROBUSTNESS.md): the clean block fast path (``fault_spec=None``
+compiles the exact pre-fault scan) vs the gated variant under all three
+fault types plus the trimmed-mean defense and the divergence guard.
+
 ``--smoke``: tiny-shape block-vs-reference run asserting
 ``max_abs_drift < 1e-5`` (scripts/bench.sh, CI perf-smoke job); writes
 nothing. When more than one device is present (CI forces 2), the smoke
-additionally gates the sharded driver against the same reference.
-``--sharded-only``: recompute just the ``sharded_block`` entry and merge
-it into an existing BENCH_round.json.
+additionally gates the sharded driver against the same reference, and
+the chaos gate (``chaos_smoke``) always rides along.
+``--chaos-smoke``: just the chaos gate (CI chaos-smoke job) — a block
+federation under dropout + stragglers + Byzantine corruption must end
+with finite global params, and a faults-off config must match the
+baseline bit-for-bit.
+``--sharded-only`` / ``--fault-only``: recompute just the
+``sharded_block`` / ``fault_overhead`` entry and merge it into an
+existing BENCH_round.json.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import subprocess
@@ -56,7 +68,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.configs import FLConfig, get_config, reduce_config
+from repro.configs import FaultSpec, FLConfig, get_config, reduce_config
+from repro.core import faults
 from repro.core import fedspu
 from repro.core import rounds as rounds_mod
 from repro.core.federation import EvalHarness, Federation
@@ -380,6 +393,98 @@ def sharded_smoke(max_drift: float = 1e-5) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# fault-injection overhead + chaos gate (docs/ROBUSTNESS.md)
+# ---------------------------------------------------------------------------
+
+# all three fault types + the full defense stack — what the chaos gate
+# and the fault_overhead entry both run under
+CHAOS_FLAGS = dict(
+    fault_spec=FaultSpec(
+        dropout=0.2, straggler=0.2, max_staleness=2, corrupt=0.2, corrupt_kind="mix"
+    ),
+    robust_agg="trimmed_mean",
+    divergence_guard=True,
+)
+
+
+def bench_fault_overhead(
+    *,
+    clients: int = 16,
+    cohort: int = 4,
+    steps: int = 1,
+    batch: int = 2,
+    rounds_per_block: int = 8,
+    blocks: int = 2,
+    test_n: int = 32,
+) -> dict:
+    """Price of the fault machinery on the block driver: the clean fast
+    path (``fault_spec=None`` compiles the exact pre-fault scan) vs the
+    gated variant under ``CHAOS_FLAGS``. The faulty path re-jits with
+    the fault masks, stale-global history and guard select in the scan
+    carry — ``overhead`` is its per-round cost as a multiple of clean."""
+    with _test_n(test_n):
+        kw = dict(clients=clients, cohort=cohort, steps=steps, batch=batch)
+        block_flags = dict(FUSED_FLAGS, rounds_per_block=rounds_per_block)
+        clean = _cnn_server(block_flags, **kw)
+        clean_s = _time_block_rounds(clean, blocks)
+        fed = _cnn_server(dict(block_flags, **CHAOS_FLAGS), **kw)
+        faulty_s = _time_block_rounds(fed, blocks)
+        return dict(
+            clean_s_per_round=clean_s,
+            faulty_s_per_round=faulty_s,
+            overhead=faulty_s / clean_s,
+            final_params_finite=bool(faults.tree_finite(fed.global_params)),
+            config=dict(
+                clients=clients, cohort=cohort, steps_per_round=steps, batch_size=batch,
+                rounds_per_block=rounds_per_block, blocks_timed=blocks, test_n=test_n,
+                fault_spec=dataclasses.asdict(CHAOS_FLAGS["fault_spec"]),
+                robust_agg=CHAOS_FLAGS["robust_agg"],
+                divergence_guard=CHAOS_FLAGS["divergence_guard"],
+            ),
+        )
+
+
+def chaos_smoke() -> dict:
+    """Chaos gate (scripts/bench.sh --smoke, CI chaos-smoke job).
+
+    Two assertions: (1) a block federation under all three fault types
+    (dropout, stragglers, mixed Byzantine corruption incl. NaN) with the
+    trimmed-mean defense + divergence guard ends with finite global
+    params and actually loses reports along the way; (2) a faults-off
+    config is bit-identical to the baseline — guard-on/``fault_spec=
+    None`` compiles the gated block variant, so this pins the fault
+    machinery's no-op path (a config without any robustness knob never
+    enters it at all: trace gating)."""
+    kw = dict(clients=8, cohort=4, steps=1, batch=2)
+    rpb, rounds = 4, 8
+    with _test_n(16):
+        flags = dict(FUSED_FLAGS, rounds_per_block=rpb)
+        fed = _cnn_server(dict(flags, **CHAOS_FLAGS), **kw)
+        fed.run(rounds=rounds)
+        finite = bool(faults.tree_finite(fed.global_params))
+        n_valid = [r.n_valid for r in fed.history.records]
+        base = _cnn_server(flags, **kw)
+        base.run(rounds=rounds)
+        off = _cnn_server(dict(flags, divergence_guard=True), **kw)
+        off.run(rounds=rounds)
+        drift = _drift(base.global_params, off.global_params)
+    res = dict(final_params_finite=finite, n_valid=n_valid, faults_off_drift=drift)
+    print(json.dumps(res, indent=2))
+    assert finite, "chaos run produced non-finite global params"
+    assert min(n_valid) < kw["cohort"], (
+        "fault injection never cost a report — the chaos gate is not exercising faults"
+    )
+    assert drift == 0.0, (
+        f"faults-off (guard-only) run drifted {drift:.2e} from the baseline"
+    )
+    print(
+        f"chaos smoke OK: finite params under chaos, n_valid min {min(n_valid)}, "
+        f"faults-off drift {drift:.1e}"
+    )
+    return res
+
+
+# ---------------------------------------------------------------------------
 # reduced transformer cohort through the jitted round engine
 # ---------------------------------------------------------------------------
 
@@ -441,7 +546,8 @@ def bench_transformer(rounds: int = 8, *, cohort: int = 4, steps: int = 2, batch
 def smoke(max_drift: float = 1e-5) -> dict:
     """Tiny-shape block-vs-reference equivalence gate (scripts/bench.sh,
     CI perf-smoke). Asserts drift, prints, writes nothing. With >1
-    device present, also gates the sharded driver (``sharded_smoke``)."""
+    device present, also gates the sharded driver (``sharded_smoke``);
+    the chaos gate (``chaos_smoke``) always rides along."""
     res = bench_cnn_block(
         clients=4, cohort=2, steps=1, batch=2, rounds_per_block=4, blocks=1, test_n=16
     )
@@ -453,6 +559,7 @@ def smoke(max_drift: float = 1e-5) -> dict:
     print(f"smoke OK: max_abs_drift {res['max_abs_drift']:.2e} < {max_drift:.0e}")
     if jax.device_count() > 1:
         res["sharded"] = sharded_smoke(max_drift)
+    res["chaos"] = chaos_smoke()
     return res
 
 
@@ -463,6 +570,7 @@ def run() -> dict:
         "block_fused": bench_cnn_block(),
         "transformer_block": bench_transformer_block(),
         "sharded_block": bench_sharded_block(),
+        "fault_overhead": bench_fault_overhead(),
         "env": dict(backend=jax.default_backend(), devices=jax.device_count(), jax=jax.__version__),
     }
     rows = [
@@ -474,7 +582,7 @@ def run() -> dict:
             f"{v['max_abs_drift']:.2e}",
         ]
         for k, v in results.items()
-        if k not in ("env", "sharded_block")
+        if k not in ("env", "sharded_block", "fault_overhead")
     ]
     print("\n== Round latency: baseline vs fused path (host/block) ==")
     print(common.fmt_table(rows, ["cohort", "base ms/round", "fused ms/round", "speedup", "max drift"]))
@@ -486,6 +594,17 @@ def run() -> dict:
             for d, v in sorted(sb["by_devices"].items(), key=lambda kv: int(kv[0]))
         ],
         ["devices", "ms/round", "scaling", "max drift"],
+    ))
+    fo = results["fault_overhead"]
+    print("\n== Fault-injection machinery: block driver overhead (docs/ROBUSTNESS.md) ==")
+    print(common.fmt_table(
+        [[
+            f"{fo['clean_s_per_round'] * 1e3:.0f}",
+            f"{fo['faulty_s_per_round'] * 1e3:.0f}",
+            f"{fo['overhead']:.2f}x",
+            str(fo["final_params_finite"]),
+        ]],
+        ["clean ms/round", "chaos ms/round", "overhead", "finite"],
     ))
     with open(OUT_PATH, "w") as f:
         json.dump(results, f, indent=2)
@@ -506,19 +625,37 @@ def main(argv=None) -> int:
         help="recompute just the sharded_block entry and merge it into "
         "an existing BENCH_round.json",
     )
+    ap.add_argument(
+        "--chaos-smoke", action="store_true",
+        help="just the chaos gate (CI chaos-smoke job): finite params "
+        "under all three fault types, faults-off == baseline bitwise; "
+        "writes nothing",
+    )
+    ap.add_argument(
+        "--fault-only", action="store_true",
+        help="recompute just the fault_overhead entry and merge it into "
+        "an existing BENCH_round.json",
+    )
     args = ap.parse_args(argv)
     if args.sharded_worker:
         print(json.dumps(bench_sharded_worker()))
         return 0
-    if args.sharded_only:
+    if args.chaos_smoke:
+        chaos_smoke()
+        return 0
+    if args.sharded_only or args.fault_only:
         results = {}
         if os.path.exists(OUT_PATH):
             with open(OUT_PATH) as f:
                 results = json.load(f)
-        results["sharded_block"] = bench_sharded_block()
+        if args.sharded_only:
+            results["sharded_block"] = bench_sharded_block()
+            print(json.dumps(results["sharded_block"], indent=2))
+        if args.fault_only:
+            results["fault_overhead"] = bench_fault_overhead()
+            print(json.dumps(results["fault_overhead"], indent=2))
         with open(OUT_PATH, "w") as f:
             json.dump(results, f, indent=2)
-        print(json.dumps(results["sharded_block"], indent=2))
         print(f"updated {os.path.normpath(OUT_PATH)}")
         return 0
     if args.smoke:

@@ -3,9 +3,13 @@
 # asserts the block-fused driver's max_abs_drift < 1e-5 against the
 # per-round host reference (repro.core.rounds.host_reference_run).
 # With >1 device present (CI sets XLA_FLAGS=--xla_force_host_platform_
-# device_count=2) the sharded-round gate runs too (sharded_smoke).
-# Wired into .github/workflows/ci.yml as the non-blocking perf-smoke
-# job so engine-math regressions surface on PRs without gating merges.
+# device_count=2) the sharded-round gate runs too (sharded_smoke), and
+# the chaos gate (chaos_smoke, docs/ROBUSTNESS.md: finite params under
+# all three fault types, faults-off == baseline bitwise) always rides
+# along. Wired into .github/workflows/ci.yml as the non-blocking
+# perf-smoke job so engine-math regressions surface on PRs without
+# gating merges; the chaos gate also runs as the blocking chaos-smoke
+# job via `round_bench.py --chaos-smoke`.
 # Usage: scripts/bench.sh [--full]   (--full regenerates BENCH_round.json)
 set -euo pipefail
 cd "$(dirname "$0")/.."

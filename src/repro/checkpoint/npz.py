@@ -29,6 +29,17 @@ def _paths_and_leaves(tree):
     return out
 
 
+def _to_native(arr: np.ndarray) -> np.ndarray:
+    """Reinterpret extension dtypes (bfloat16, fp8, ... — numpy kind 'V')
+    as same-width unsigned ints for storage. npz writes them as raw void
+    bytes otherwise, and ``np.load`` hands back un-castable ``V2`` blobs;
+    the true dtype lives in the ``.tree.json`` sidecar and ``restore_tree``
+    views the bits back."""
+    if arr.dtype.kind == "V":
+        return arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+    return arr
+
+
 def _path_str(p) -> str:
     if hasattr(p, "key"):
         return str(p.key)
@@ -44,17 +55,26 @@ def save_tree(ckpt_dir: str, step: int, tree: Any) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     leaves = _paths_and_leaves(tree)
     dtypes = {k: str(v.dtype) for k, v in leaves.items()}
+    stored = {k: _to_native(v) for k, v in leaves.items()}
     final = os.path.join(ckpt_dir, f"step_{step}.npz")
     fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp.npz")
     os.close(fd)
     try:
-        np.savez(tmp, **leaves)
+        np.savez(tmp, **stored)
         os.replace(tmp, final)
     finally:
         if os.path.exists(tmp):
             os.remove(tmp)
-    with open(final + ".tree.json", "w") as f:
-        json.dump({"step": step, "dtypes": dtypes}, f)
+    # sidecar written atomically too: resume reads it to undo _to_native
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp.json")
+    os.close(fd)
+    try:
+        with open(tmp, "w") as f:
+            json.dump({"step": step, "dtypes": dtypes}, f)
+        os.replace(tmp, final + ".tree.json")
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
     return final
 
 
@@ -64,14 +84,27 @@ def restore_tree(ckpt_dir: str, step: int, like: Any) -> Any:
     path = os.path.join(ckpt_dir, f"step_{step}.npz")
     data = np.load(path)
     leaves = dict(data.items())
+    true_dtypes = {}
+    sidecar = path + ".tree.json"
+    if os.path.exists(sidecar):
+        with open(sidecar) as f:
+            true_dtypes = json.load(f).get("dtypes", {})
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     out = []
     for kpath, leaf in flat:
         key = "/".join(_path_str(p) for p in kpath)
         if key not in leaves:
-            raise KeyError(f"checkpoint {path} missing leaf {key!r}")
+            raise KeyError(
+                f"checkpoint {path} missing leaf {key!r} — the template "
+                f"treedef does not match the saved one (saved leaves: "
+                f"{sorted(leaves)})"
+            )
         arr = leaves[key]
+        want = true_dtypes.get(key)
+        if want is not None and want != str(arr.dtype):
+            # extension dtype stored as uintN (see _to_native): view back
+            arr = arr.view(np.dtype(want))
         want_shape = tuple(leaf.shape)
         if tuple(arr.shape) != want_shape:
             raise ValueError(f"leaf {key!r}: checkpoint shape {arr.shape} != template {want_shape}")

@@ -5,6 +5,7 @@ from __future__ import annotations
 from repro.configs.base import (  # noqa: F401
     INPUT_SHAPES,
     BlockSpec,
+    FaultSpec,
     FLConfig,
     InputShape,
     ModelConfig,

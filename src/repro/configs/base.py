@@ -194,6 +194,54 @@ INPUT_SHAPES = {
 # ---------------------------------------------------------------------------
 
 
+CORRUPT_KINDS = ("nan", "sign_flip", "scale", "mix")
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """Seeded client-fault injection (docs/ROBUSTNESS.md).
+
+    Per-round, per-client fault draws are derived deterministically from
+    ``(fl.seed, round, client_id)`` by ``repro.core.faults.FaultModel`` —
+    the same client faults the same way in the host loop, the block
+    driver, and any block size. Rates are independent Bernoulli draws;
+    a dropped client takes precedence over its other draws.
+
+    dropout        — P(client never reports; download-only comm)
+    straggler      — P(client reports an update trained from a stale
+                     global, age uniform in [1, max_staleness])
+    corrupt        — P(the *reported* update is Byzantine)
+    corrupt_kind   — "nan" (non-finite leaves) | "sign_flip" (update
+                     negated) | "scale" (update × corrupt_scale) |
+                     "mix" (uniform over the three)
+    """
+
+    dropout: float = 0.0
+    straggler: float = 0.0
+    max_staleness: int = 1
+    corrupt: float = 0.0
+    corrupt_kind: str = "nan"
+    corrupt_scale: float = 10.0
+
+    def __post_init__(self):
+        for f in ("dropout", "straggler", "corrupt"):
+            v = getattr(self, f)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"FaultSpec.{f} must be in [0, 1], got {v}")
+        if self.max_staleness < 1:
+            raise ValueError(
+                f"FaultSpec.max_staleness must be >= 1, got {self.max_staleness}"
+            )
+        if self.corrupt_kind not in CORRUPT_KINDS:
+            raise ValueError(
+                f"FaultSpec.corrupt_kind must be one of {CORRUPT_KINDS}, "
+                f"got {self.corrupt_kind!r}"
+            )
+
+
+ROBUST_AGGS = ("norm_clip", "norm_reject", "trimmed_mean")
+
+
 @dataclass(frozen=True)
 class FLConfig:
     """Paper §5.1 settings (defaults match the paper)."""
@@ -245,6 +293,24 @@ class FLConfig:
     # clients (never selected, sliced off on readback).
     mesh_shape: Optional[Tuple[int, ...]] = None
     client_axis: str = "data"
+
+    # Fault tolerance (docs/ROBUSTNESS.md). fault_spec=None (the default)
+    # keeps every engine bit-for-bit unchanged; a FaultSpec — even one
+    # with all rates 0.0 — routes rounds through the fault-aware trace
+    # (the zero-rate trace is pinned drift-0.0 against the None trace by
+    # tests/test_faults.py and the CI chaos-smoke gate).
+    # robust_agg wraps the method's Fig. 9 aggregate with a server-side
+    # defense ("norm_clip" | "norm_reject" | "trimmed_mean"); it requires
+    # the vmap cohort layout (the scan layout streams clients one at a
+    # time and never sees the full report stack). divergence_guard adds
+    # post-aggregate non-finite detection: a non-finite round is rolled
+    # back (global and locals unchanged) and its reporting contributors
+    # are quarantined out of future cohorts.
+    fault_spec: Optional[FaultSpec] = None
+    robust_agg: Optional[str] = None
+    robust_clip: float = 10.0  # norm threshold for norm_clip / norm_reject
+    robust_trim_k: int = 1  # clients trimmed per end (trimmed_mean)
+    divergence_guard: bool = False
 
 
 def client_ratio(fl: FLConfig, client_id: int) -> float:

@@ -1,0 +1,207 @@
+"""Seeded client-fault injection (docs/ROBUSTNESS.md).
+
+Production federation is defined by partial participation and bad
+updates; this module makes failure a first-class, deterministically
+injectable input to both round drivers. A ``FaultModel`` derives one
+fault draw per (round, client) from a dedicated RNG stream rooted at the
+run seed:
+
+    key(t, c) = fold_in(fold_in(fold_in(PRNGKey(seed), FAULT_STREAM), t), c)
+
+so a client's fault at round ``t`` is identical in the host loop, the
+block-fused scan, any ``rounds_per_block``, and any cohort composition —
+and a checkpoint/resume replays the same faults.
+
+Three fault classes (``repro.configs.FaultSpec``):
+
+  dropout    — the client never reports: weight 0 in the Fig. 9
+               aggregate, its personal params unchanged, upload bytes 0
+               (it still downloaded the sub-model).
+  straggler  — the client reports, but its update was trained from a
+               stale global of age a ∈ [1, max_staleness]; the drivers
+               keep a ring of the last ``max_staleness`` globals and
+               hand each straggler its stale start point.
+  corruption — the *reported* update is Byzantine: non-finite leaves,
+               a sign-flipped update, or the update scaled by K. The
+               client's own personal params keep the genuine trained
+               values (corruption is in transit / adversarial reporting).
+
+Draws are computed inside the jitted round functions (pure functions of
+``t`` and the cohort ids), so faulty runs stay fully jitted and
+shardable; the host loop evaluates the same function eagerly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FaultSpec
+
+# Stream tag separating fault draws from the mask keys (PRNGKey(seed))
+# and the block driver's data keys (rounds.DATA_STREAM).
+FAULT_STREAM = 0x0FA7
+
+# Corruption kind ids carried in FaultDraw.corrupt (0 = honest report).
+KIND_NONE, KIND_NAN, KIND_SIGN, KIND_SCALE = 0, 1, 2, 3
+_KIND_IDS = {"nan": KIND_NAN, "sign_flip": KIND_SIGN, "scale": KIND_SCALE}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class FaultDraw:
+    """One round's per-client fault draws (all ``[K]``, device arrays).
+
+    dropped   — bool; client never reports this round
+    staleness — int32 global age in [0, S]; 0 = fresh (non-straggler)
+    corrupt   — int32 corruption kind id (KIND_*); 0 = honest
+    """
+
+    dropped: Any
+    staleness: Any
+    corrupt: Any
+
+    def tree_flatten(self):
+        return (self.dropped, self.staleness, self.corrupt), None
+
+    @classmethod
+    def tree_unflatten(cls, _, leaves):
+        return cls(*leaves)
+
+
+class FaultModel:
+    """Derives deterministic per-(round, client) fault draws from
+    ``FaultSpec`` rates and the run seed. Stateless beyond the spec —
+    safe to rebuild after a resume."""
+
+    def __init__(self, spec: FaultSpec, seed: int):
+        self.spec = spec
+        self.seed = seed
+        self._base = jax.random.fold_in(jax.random.PRNGKey(seed), FAULT_STREAM)
+
+    @property
+    def stragglers_enabled(self) -> bool:
+        """Whether the drivers must keep a stale-global history."""
+        return self.spec.straggler > 0.0
+
+    def draw(self, t, client_ids) -> FaultDraw:
+        """Fault draws for ``client_ids`` ([K] int) at absolute round
+        ``t``. jit-friendly (t and client_ids may be traced); the draw
+        for a (t, client) pair is invariant to cohort composition, slot
+        order, and block size."""
+        spec = self.spec
+        key = jax.random.fold_in(self._base, t)
+        cohort = jnp.asarray(client_ids, jnp.int32)
+        u = jax.vmap(
+            lambda c: jax.random.uniform(jax.random.fold_in(key, c), (5,))
+        )(cohort)
+        dropped = u[:, 0] < spec.dropout
+        straggler = ~dropped & (u[:, 1] < spec.straggler)
+        # age uniform in [1, S]; u in [0,1) so the floor never hits S
+        age = 1 + jnp.floor(u[:, 2] * spec.max_staleness).astype(jnp.int32)
+        staleness = jnp.where(straggler, age, 0)
+        if spec.corrupt_kind == "mix":
+            # independent uniform so the kind is unbiased given a hit
+            kind = 1 + jnp.minimum(jnp.floor(u[:, 4] * 3), 2.0).astype(jnp.int32)
+        else:
+            kind = jnp.full(cohort.shape, _KIND_IDS[spec.corrupt_kind], jnp.int32)
+        corrupt_hit = ~dropped & (u[:, 3] < spec.corrupt)
+        corrupt = jnp.where(corrupt_hit, kind, KIND_NONE)
+        return FaultDraw(dropped, staleness, corrupt)
+
+
+# ---------------------------------------------------------------------------
+# corruption / rollback helpers (shared by both round drivers)
+# ---------------------------------------------------------------------------
+
+
+def corrupt_reported(trained, global_params, kind, scale: float):
+    """Byzantine transform of one client's reported params.
+
+    trained / global_params: same-structure trees (one client);
+    kind: scalar int32 KIND_* id; scale: static ×K factor. The honest
+    path (kind 0) is the identity, so zero-rate fault specs stay
+    bit-identical to fault-free runs."""
+
+    def leaf(t, g):
+        g32 = g.astype(jnp.float32)
+        d = t.astype(jnp.float32) - g32
+        rep = jnp.where(kind == KIND_SIGN, g32 - d, t.astype(jnp.float32))
+        rep = jnp.where(kind == KIND_SCALE, g32 + scale * d, rep)
+        rep = jnp.where(kind == KIND_NAN, jnp.nan, rep)
+        return rep.astype(t.dtype)
+
+    return jax.tree.map(leaf, trained, global_params)
+
+
+def corrupt_reported_stack(trained_stacked, global_params, kinds, scale: float):
+    """``corrupt_reported`` over a client-stacked [K, ...] report."""
+    return jax.vmap(
+        lambda t, k: corrupt_reported(t, global_params, k, scale)
+    )(trained_stacked, kinds)
+
+
+def tree_finite(tree):
+    """Scalar bool: every leaf of ``tree`` is entirely finite (the
+    divergence guard's post-aggregate check)."""
+    flags = [jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(tree)]
+    out = flags[0]
+    for f in flags[1:]:
+        out = out & f
+    return out
+
+
+def tree_select(pred, on_true, on_false):
+    """Per-leaf ``where`` on a scalar predicate — the rollback select
+    (cheaper inside a scan carry than cond-copying both branches)."""
+    return jax.tree.map(lambda a, b: jnp.where(pred, a, b), on_true, on_false)
+
+
+def select_clients(flags, on_true, on_false):
+    """Per-client select over client-stacked ``[K, ...]`` trees:
+    client i takes ``on_true`` leaves where ``flags[i]`` (e.g. dropped
+    clients keep their previous personal params)."""
+    return jax.tree.map(
+        lambda a, b: jnp.where(flags.reshape(flags.shape + (1,) * (a.ndim - 1)), a, b),
+        on_true,
+        on_false,
+    )
+
+
+# ---------------------------------------------------------------------------
+# stale-global history (stragglers)
+# ---------------------------------------------------------------------------
+
+
+def init_history(global_params, max_staleness: int):
+    """``[S+1, ...]`` stacked global history, index a = age (0 = current),
+    seeded with the initial global at every age."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (max_staleness + 1,) + x.shape).astype(x.dtype),
+        global_params,
+    )
+
+
+def push_history(hist, new_global):
+    """Shift the ring by one round: age a becomes a+1, the new global
+    enters at age 0 (the oldest entry falls off)."""
+    return jax.tree.map(
+        lambda h, g: jnp.concatenate([g[None].astype(h.dtype), h[:-1]]), hist, new_global
+    )
+
+
+def gather_stale_globals(hist, staleness):
+    """Client-stacked [K, ...] start globals: client i trains from the
+    age-``staleness[i]`` global (0 = fresh)."""
+    return jax.tree.map(lambda h: h[staleness], hist)
+
+
+def build_fault_model(fl) -> Optional[FaultModel]:
+    """``FaultModel`` for an FLConfig, or None when fault injection is
+    off. A zero-rate FaultSpec still builds a model (the fault-aware
+    trace must be exercised — see the chaos-smoke gate)."""
+    if fl.fault_spec is None:
+        return None
+    return FaultModel(fl.fault_spec, fl.seed)

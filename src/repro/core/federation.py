@@ -24,6 +24,9 @@ JSON — examples and benchmarks route through it.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import tempfile
 import time
 from dataclasses import dataclass, field
 from functools import partial
@@ -48,7 +51,12 @@ ClientData = List[Dict[str, Dict[str, np.ndarray]]]
 
 @dataclass
 class RoundRecord:
-    """One round's history row: cohort, mean Eq. 6 losses, comm GB."""
+    """One round's history row: cohort, mean Eq. 6 losses, comm GB.
+
+    n_valid counts the clients that actually reported (sampled minus
+    dropped — docs/ROBUSTNESS.md); ``rolled_back`` marks a round the
+    divergence guard reverted (its aggregate was non-finite; the global
+    kept the last finite state)."""
 
     round: int
     participants: List[int]
@@ -57,6 +65,8 @@ class RoundRecord:
     comm_gb: float
     mean_accuracy: Optional[float] = None
     wall_time_s: float = 0.0
+    n_valid: Optional[int] = None
+    rolled_back: bool = False
 
 
 @dataclass
@@ -159,16 +169,16 @@ class CommMeter:
         self.param_bytes = param_bytes
         self.total_gb = 0.0
 
-    def round_gb(self, active_fracs) -> float:
-        """One round's up+down GB: sum of active fractions x model size x 2
-        (FedSPU's communication saving — paper Table 3)."""
-        gb = float(
-            np.sum(np.asarray(active_fracs, np.float64))
-            * self.n_params
-            * self.param_bytes
-            * 2
-            / 1e9
-        )
+    def round_gb(self, active_fracs, upload_fracs=None) -> float:
+        """One round's up+down GB: sum of active fractions x model size
+        (FedSPU's communication saving — paper Table 3), counted per
+        direction. Every sampled client downloads its sub-model;
+        ``upload_fracs`` (defaults to ``active_fracs``) carries the
+        fractions of the clients that actually reported — a dropped
+        client accrues download-only bytes (docs/ROBUSTNESS.md)."""
+        down = np.sum(np.asarray(active_fracs, np.float64))
+        up = down if upload_fracs is None else np.sum(np.asarray(upload_fracs, np.float64))
+        gb = float((down + up) * self.n_params * self.param_bytes / 1e9)
         self.total_gb += gb
         return gb
 
@@ -259,8 +269,10 @@ class EvalHarness:
         every chunk compiles to one shape. Test batches are sliced from
         the resident device stack (no per-call H2D re-upload).
         """
-        stack = self.test_stack_dev()
         n = len(client_ids)
+        if n == 0:  # empty / all-invalid cohort (docs/ROBUSTNESS.md)
+            return np.zeros(0)
+        stack = self.test_stack_dev()
         out = []
         for s in range(0, n, self.EVAL_CHUNK):
             rows = np.minimum(np.arange(s, s + self.EVAL_CHUNK), n - 1)
@@ -273,6 +285,8 @@ class EvalHarness:
     # -- public ---------------------------------------------------------
     def cohort_test_losses(self, params_stacked, cohort: np.ndarray) -> np.ndarray:
         """Per-client test loss on their own test set (Eq. 6's L_test)."""
+        if len(cohort) == 0:
+            return np.zeros(0)
         if self.fl.batched_eval:
             return self._batched_over_clients(self._batch_loss_fn, params_stacked, cohort)
         losses = []
@@ -283,6 +297,8 @@ class EvalHarness:
 
     def mean_accuracy(self, local_params, n_clients: int) -> float:
         """Mean personalized accuracy over the first ``n_clients``."""
+        if n_clients == 0:
+            return 0.0
         if self.fl.batched_eval:
             accs = self._batched_over_clients(
                 self._batch_eval_fn, local_params, np.arange(self.fl.n_clients)[:n_clients]
@@ -380,6 +396,15 @@ class Federation:
         self.client_data = client_data
         self.steps_per_round = steps_per_round
         self.strategy = resolve_strategy(strategy if strategy is not None else fl.method)
+        if fl.robust_agg is not None:
+            # robust aggregation is an inter-client defense: it needs the
+            # stacked client axis the vmap layout materializes (the scan
+            # layout streams running sums and never calls the hook)
+            from repro.strategies.robust import robust_wrap
+
+            self.strategy = robust_wrap(
+                self.strategy, fl.robust_agg, clip=fl.robust_clip, trim_k=fl.robust_trim_k
+            )
         self.rng = np.random.default_rng(fl.seed)
         # Client-axis sharding (docs/PERF.md "Sharded block rounds"):
         # fl.mesh_shape builds a ("data", "model") mesh and every
@@ -445,9 +470,28 @@ class Federation:
         layout = fl.cohort_layout
         if layout == "auto":
             layout = "scan" if jax.default_backend() == "cpu" else "vmap"
+        if fl.robust_agg is not None:
+            layout = "vmap"  # see the robust_wrap note above
         self.cohort_layout = layout
+        # Fault injection (docs/ROBUSTNESS.md): fault_spec=None keeps the
+        # round fn's trace bit-identical to the fault-free engine (the
+        # faults/client_globals kwargs are simply never passed).
+        from repro.core import faults as F
+
+        self.fault_model = F.build_fault_model(fl)
+        self.quarantined = np.zeros(n, bool)
+        self._gp_hist = None
+        if self.fault_model is not None and self.fault_model.stragglers_enabled:
+            self._gp_hist = F.init_history(self.global_params, fl.fault_spec.max_staleness)
         round_fn = fedspu.fl_round_scan if layout == "scan" else fedspu.fl_round_vmap
+        # The divergence guard rolls back to the previous global, so that
+        # buffer must survive the round call — drop it from donation.
         donate = (0, 1) if fl.donate_buffers else ()
+        if fl.divergence_guard and fl.donate_buffers:
+            donate = (1,)
+        kw: Dict[str, Any] = {}
+        if self.fault_model is not None:
+            kw["corrupt_scale"] = fl.fault_spec.corrupt_scale
         self._round_fn = jax.jit(
             partial(
                 round_fn,
@@ -457,6 +501,7 @@ class Federation:
                 compact=fl.compact_agg,
                 fused=fl.fused_round,
                 kernel_mode=fl.kernel_mode,
+                **kw,
             ),
             donate_argnums=donate,
         )
@@ -512,6 +557,8 @@ class Federation:
         pool = np.arange(self.fl.n_clients)
         for cb in self.callbacks:
             pool = cb.filter_pool(self, pool)
+        if self.quarantined.any():
+            pool = pool[~self.quarantined[pool]]
         return pool
 
     def _cohort_batches(self, cohort: np.ndarray):
@@ -532,7 +579,20 @@ class Federation:
         early-stopped)."""
         if any(cb.should_terminate(self) for cb in self.callbacks):
             return False
+        from repro.core import faults as F
+
         cohort = self.sampler.select(self._pool())
+        if len(cohort) == 0:
+            # quarantine/filters emptied the pool: explicit no-op record
+            # instead of a downstream shape error (docs/ROBUSTNESS.md)
+            self.history.records.append(
+                RoundRecord(
+                    round=t, participants=[], train_loss=0.0, combined_loss=0.0,
+                    comm_gb=0.0, n_valid=0,
+                )
+            )
+            self.history.rounds_run = t + 1
+            return True
         t0 = time.perf_counter()
         keys = jax.random.split(jax.random.fold_in(jax.random.PRNGKey(self.fl.seed), t), len(cohort))
         cohort_idx = jnp.asarray(np.asarray(cohort))
@@ -541,33 +601,67 @@ class Federation:
         weights = self.weights_all[cohort_idx]
         locals_c = self._gather_fn(self.local_params, cohort_idx)
 
+        fault_kw = {}
+        reporting = np.ones(len(cohort), bool)
+        if self.fault_model is not None:
+            draw = self.fault_model.draw(t, cohort_idx)
+            fault_kw["faults"] = draw
+            if self._gp_hist is not None:
+                fault_kw["client_globals"] = F.gather_stale_globals(self._gp_hist, draw.staleness)
+            reporting = ~np.asarray(draw.dropped)
+        prev_global = self.global_params  # survives the call iff guard on
         new_global, new_locals, train_losses, fracs = self._round_fn(
-            self.global_params, locals_c, keys, p_ratios, batches, weights
+            self.global_params, locals_c, keys, p_ratios, batches, weights, **fault_kw
         )
+        rolled_back = False
+        if self.fl.divergence_guard and not bool(F.tree_finite(new_global)):
+            # non-finite aggregate: keep the last finite global and
+            # quarantine this round's contributors (docs/ROBUSTNESS.md)
+            new_global = prev_global
+            self.quarantined[cohort[reporting]] = True
+            rolled_back = True
         self.global_params = new_global
         self.local_params = self._scatter_fn(self.local_params, cohort_idx, new_locals)
+        if self._gp_hist is not None:
+            self._gp_hist = F.push_history(self._gp_hist, self.global_params)
         # block on the round outputs so the clock reads compute, not
         # dispatch latency (async dispatch returns immediately)
         jax.block_until_ready((self.global_params, self.local_params))
         wall = time.perf_counter() - t0
 
-        # Eq. 6 combined losses + callback bookkeeping (ES et al.)
-        test_losses = self.eval_harness.cohort_test_losses(new_locals, np.asarray(cohort))
+        # Eq. 6 combined losses + callback bookkeeping (ES et al.) —
+        # dropped clients never report, so only the reporting subset is
+        # evaluated and fed to the stop rule.
+        rep_cohort = np.asarray(cohort)[reporting]
+        rep_locals = (
+            new_locals if reporting.all()
+            else jax.tree.map(lambda x: x[jnp.asarray(reporting)], new_locals)
+        )
+        test_losses = self.eval_harness.cohort_test_losses(rep_locals, rep_cohort)
+        tl_np = np.asarray(train_losses)
         combined = es.combined_loss(
-            np.asarray(train_losses, np.float64), np.asarray(test_losses, np.float64), self.fl.split_lambda
+            np.asarray(train_losses, np.float64)[reporting],
+            np.asarray(test_losses, np.float64),
+            self.fl.split_lambda,
         )
         for cb in self.callbacks:
-            cb.on_round_end(self, t, cohort, combined)
+            cb.on_round_end(self, t, rep_cohort, combined)
 
-        comm_gb = self.comm.round_gb(fracs)
+        fracs_np = np.asarray(fracs, np.float64)
+        comm_gb = self.comm.round_gb(
+            fracs_np, upload_fracs=None if reporting.all() else fracs_np * reporting
+        )
+        n_rep = int(reporting.sum())
         self.history.records.append(
             RoundRecord(
                 round=t,
                 participants=[int(c) for c in cohort],
-                train_loss=float(np.mean(np.asarray(train_losses))),
-                combined_loss=float(np.mean(combined)),
+                train_loss=float(np.mean(tl_np[reporting])) if n_rep else 0.0,
+                combined_loss=float(np.mean(combined)) if n_rep else 0.0,
                 comm_gb=comm_gb,
                 wall_time_s=wall,
+                n_valid=n_rep,
+                rolled_back=rolled_back,
             )
         )
         self.history.total_comm_gb = self.comm.total_gb  # meter owns the total
@@ -614,33 +708,49 @@ class Federation:
         block opened with every client already stopped)."""
         runner = self._ensure_block_runner()
         st = self.es_state
+        fault_kw = {}
+        if runner._faulty:
+            fault_kw = dict(gp_hist=self._gp_hist, quarantined=self.quarantined)
         gp, store, res = runner.run_block(
             t_start, self.global_params, self.local_params, st.prev_loss, st.stopped,
-            t_limit=limit,
+            t_limit=limit, **fault_kw,
         )
         self.global_params, self.local_params = gp, store
         self.es_state = es.ESState(res.prev_loss.astype(np.float64), res.stopped)
+        if res.quarantined is not None:
+            self.quarantined = res.quarantined
+        if res.gp_hist is not None:
+            self._gp_hist = res.gp_hist
         n_exec = res.rounds_executed
         per_round_wall = res.wall_time_s / max(n_exec, 1)
         for r in range(n_exec):  # executed rounds are a prefix of the block
             t = t_start + r
             v = res.valid[r]
+            # reporting slots: sampled minus dropped (fault runs only)
+            rep = v if res.dropped is None else v & ~res.dropped[r]
             cohort = res.cohorts[r][v]
-            combined = res.combined[r][v]
-            comm_gb = self.comm.round_gb(res.fracs[r])
+            combined = res.combined[r][rep]
+            all_report = bool(rep.sum() == v.sum())
+            comm_gb = self.comm.round_gb(
+                res.fracs[r],
+                upload_fracs=None if all_report else res.fracs[r] * rep,
+            )
             for cb in self.callbacks:
                 # ES already ran on device (synced above); other hooks
                 # observe the round post-hoc, in order.
                 if not isinstance(cb, EarlyStoppingCallback):
-                    cb.on_round_end(self, t, cohort, combined)
+                    cb.on_round_end(self, t, res.cohorts[r][rep], combined)
+            n_rep = int(rep.sum())
             self.history.records.append(
                 RoundRecord(
                     round=t,
                     participants=[int(c) for c in cohort],
-                    train_loss=float(res.train_losses[r][v].mean()),
-                    combined_loss=float(combined.mean()),
+                    train_loss=float(res.train_losses[r][rep].mean()) if n_rep else 0.0,
+                    combined_loss=float(combined.mean()) if n_rep else 0.0,
                     comm_gb=comm_gb,
                     wall_time_s=per_round_wall,
+                    n_valid=n_rep,
+                    rolled_back=bool(res.rolled_back[r]) if res.rolled_back is not None else False,
                 )
             )
             self.history.rounds_run = t + 1
@@ -648,9 +758,13 @@ class Federation:
         self.history.total_train_time_s += res.wall_time_s
         return n_exec
 
-    def _run_blocks(self, rounds: int, eval_every: int) -> FLHistory:
+    def _run_blocks(
+        self, rounds: int, eval_every: int,
+        start_t: int = 0, checkpoint_every: int = 0, ckpt_dir: Optional[str] = None,
+    ) -> FLHistory:
         R = self.fl.rounds_per_block
-        t = 0
+        t = start_t
+        last_ckpt = start_t
         while t < rounds:
             if any(cb.should_terminate(self) for cb in self.callbacks):
                 break
@@ -666,11 +780,103 @@ class Federation:
                 ]
                 if cadence:
                     cadence[-1].mean_accuracy = self.evaluate(max_clients=20)
+            if checkpoint_every and ckpt_dir and (
+                self.history.rounds_run - last_ckpt >= checkpoint_every
+            ):
+                # block granularity: checkpoints land on block boundaries
+                self.save_state(ckpt_dir)
+                last_ckpt = self.history.rounds_run
             if n_exec < R:
                 break
             t += R
         self.history.final_accuracy = self.evaluate()
         return self.history
+
+    # -- checkpoint / resume (docs/ROBUSTNESS.md) -----------------------
+    def _state_arrays(self) -> Dict[str, Any]:
+        """The array-valued run state as one pytree (the npz payload)."""
+        st = self.es_state
+        tree: Dict[str, Any] = {
+            "global": self.global_params,
+            "locals": self.local_params,
+            "es_prev": np.asarray(st.prev_loss, np.float64),
+            "es_stopped": np.asarray(st.stopped, bool),
+            "quarantined": np.asarray(self.quarantined, bool),
+        }
+        if self._gp_hist is not None:
+            tree["gp_hist"] = self._gp_hist
+        return tree
+
+    def save_state(self, ckpt_dir: str, step: Optional[int] = None) -> str:
+        """Checkpoint the full run state after ``step`` completed rounds
+        (default: ``history.rounds_run``): params (global + every
+        client's), ES state, quarantine set, straggler history, the host
+        RNG stream, comm totals and the round history. Atomic (tmp +
+        rename), so a crash mid-save never corrupts the latest
+        checkpoint. Restoring reproduces the uninterrupted run
+        bit-for-bit (tests/test_checkpoint_resume.py)."""
+        from repro.checkpoint import npz
+
+        step = self.history.rounds_run if step is None else int(step)
+        path = npz.save_tree(ckpt_dir, step, self._state_arrays())
+        meta = dict(
+            round=step,
+            rng_state=self.rng.bit_generator.state,
+            total_comm_gb=self.comm.total_gb,
+            history=self.history.to_dict(),
+        )
+        fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp.state.json")
+        os.close(fd)
+        try:
+            with open(tmp, "w") as f:
+                json.dump(meta, f)
+            os.replace(tmp, os.path.join(ckpt_dir, f"step_{step}.state.json"))
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
+        return path
+
+    def restore_state(self, ckpt_dir: str, step: Optional[int] = None) -> int:
+        """Restore the state written by ``save_state`` (default: the
+        latest step in ``ckpt_dir``); returns the restored round count.
+        The federation must be built from the same config — the saved
+        treedef has to match the live one."""
+        from repro.checkpoint import npz
+
+        if step is None:
+            step = npz.latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {ckpt_dir!r}")
+        tree = npz.restore_tree(ckpt_dir, step, self._state_arrays())
+        with open(os.path.join(ckpt_dir, f"step_{step}.state.json")) as f:
+            meta = json.load(f)
+        self.global_params = jax.tree.map(jnp.asarray, tree["global"])
+        local_params = jax.tree.map(jnp.asarray, tree["locals"])
+        if self.mesh is not None:
+            from repro.launch import shardings as sh
+
+            local_params = jax.device_put(
+                local_params,
+                sh.client_stack_shardings(self.mesh, local_params, client_axes=self.fl.client_axis),
+            )
+        self.local_params = local_params
+        self.es_state = es.ESState(
+            np.asarray(tree["es_prev"], np.float64), np.asarray(tree["es_stopped"], bool)
+        )
+        self.quarantined = np.asarray(tree["quarantined"], bool)
+        if "gp_hist" in tree:
+            self._gp_hist = jax.tree.map(jnp.asarray, tree["gp_hist"])
+        self.rng.bit_generator.state = meta["rng_state"]
+        self.comm.total_gb = float(meta["total_comm_gb"])
+        h = meta["history"]
+        self.history = FLHistory(
+            records=[RoundRecord(**r) for r in h["records"]],
+            final_accuracy=h["final_accuracy"],
+            rounds_run=h["rounds_run"],
+            total_comm_gb=h["total_comm_gb"],
+            total_train_time_s=h["total_train_time_s"],
+        )
+        return int(meta["round"])
 
     # ------------------------------------------------------------------
     def evaluate(self, max_clients: Optional[int] = None) -> float:
@@ -678,17 +884,45 @@ class Federation:
         n = self.fl.n_clients if max_clients is None else min(max_clients, self.fl.n_clients)
         return self.eval_harness.mean_accuracy(self.local_params, n)
 
-    def run(self, rounds: Optional[int] = None, eval_every: int = 0) -> FLHistory:
+    def run(
+        self,
+        rounds: Optional[int] = None,
+        eval_every: int = 0,
+        *,
+        checkpoint_every: int = 0,
+        ckpt_dir: Optional[str] = None,
+        resume: bool = False,
+    ) -> FLHistory:
         """Run FL to ``rounds`` (Alg. 1): the host loop per round, or the
         block-fused driver when ``fl.rounds_per_block``/``on_device_data``
-        select it. Returns the populated ``FLHistory``."""
+        select it. Returns the populated ``FLHistory``.
+
+        ``checkpoint_every``/``ckpt_dir`` write the full run state every
+        N completed rounds (block granularity on the block driver);
+        ``resume=True`` restores the latest checkpoint in ``ckpt_dir``
+        (if any) and continues from it — a killed-and-resumed run
+        reproduces the uninterrupted one bit-for-bit
+        (docs/ROBUSTNESS.md)."""
         rounds = self.fl.max_rounds if rounds is None else rounds
+        if (checkpoint_every or resume) and not ckpt_dir:
+            raise ValueError("checkpoint_every/resume require ckpt_dir")
+        start_t = 0
+        if resume:
+            from repro.checkpoint import npz
+
+            if npz.latest_step(ckpt_dir) is not None:
+                start_t = self.restore_state(ckpt_dir)
         if self._use_block:
-            return self._run_blocks(rounds, eval_every)
-        for t in range(rounds):
+            return self._run_blocks(
+                rounds, eval_every,
+                start_t=start_t, checkpoint_every=checkpoint_every, ckpt_dir=ckpt_dir,
+            )
+        for t in range(start_t, rounds):
             if not self.run_round(t):
                 break
             if eval_every and (t + 1) % eval_every == 0:
                 self.history.records[-1].mean_accuracy = self.evaluate(max_clients=20)
+            if checkpoint_every and (t + 1) % checkpoint_every == 0:
+                self.save_state(ckpt_dir)
         self.history.final_accuracy = self.evaluate()
         return self.history

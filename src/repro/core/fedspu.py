@@ -155,25 +155,58 @@ def aggregate(flm: FLModel, global_params, trained_stacked, unit_masks_stacked, 
     )
 
 
-def fl_round_vmap(flm: FLModel, global_params, locals_stacked, keys, p_ratios, batches, weights, method, lr, compact: bool = True, *, fused: bool = True, kernel_mode: str = "auto"):
+def fl_round_vmap(flm: FLModel, global_params, locals_stacked, keys, p_ratios, batches, weights, method, lr, compact: bool = True, *, fused: bool = True, kernel_mode: str = "auto", faults=None, client_globals=None, corrupt_scale: float = 10.0):
     """Cohort-parallel round (clients on the ``data`` mesh axis).
 
     locals_stacked: client-stacked param tree [C, ...]; keys [C,2]; p_ratios
     [C]; batches leaves [C, steps, ...]; weights [C].
     Returns (new_global, new_locals [C,...], train_losses [C]).
+
+    Fault injection (docs/ROBUSTNESS.md): ``faults`` is a
+    ``repro.core.faults.FaultDraw`` of [C] masks. Dropped clients get
+    weight 0 in the aggregate and keep their previous personal params;
+    corrupted clients report a Byzantine transform of their update (their
+    own personal params keep the genuine trained values). Stragglers are
+    realized via ``client_globals`` ([C, ...] per-client start globals
+    gathered from a stale-global history by the caller). The default
+    ``faults=None`` keeps the trace bit-identical to the fault-free
+    engine — both kwargs gate extra graph segments at trace time.
     """
     strat = _resolve(method)
-    trained, unit_masks, mask_trees, losses, fracs = jax.vmap(
-        lambda l, k, p, b: _client_round(
-            flm, global_params, l, k, p, b, strat, lr, fused=fused, kernel_mode=kernel_mode
-        )
-    )(locals_stacked, keys, p_ratios, batches)
+    if client_globals is None:
+        trained, unit_masks, mask_trees, losses, fracs = jax.vmap(
+            lambda l, k, p, b: _client_round(
+                flm, global_params, l, k, p, b, strat, lr, fused=fused, kernel_mode=kernel_mode
+            )
+        )(locals_stacked, keys, p_ratios, batches)
+        start_globals = None
+    else:
+        trained, unit_masks, mask_trees, losses, fracs = jax.vmap(
+            lambda g, l, k, p, b: _client_round(
+                flm, g, l, k, p, b, strat, lr, fused=fused, kernel_mode=kernel_mode
+            )
+        )(client_globals, locals_stacked, keys, p_ratios, batches)
+        start_globals = client_globals
+    reported, new_locals, agg_weights = trained, trained, weights
+    if faults is not None:
+        from repro.core import faults as F
+
+        if start_globals is None:
+            reported = F.corrupt_reported_stack(
+                trained, global_params, faults.corrupt, corrupt_scale
+            )
+        else:
+            reported = jax.vmap(
+                lambda t, g, k: F.corrupt_reported(t, g, k, corrupt_scale)
+            )(trained, start_globals, faults.corrupt)
+        agg_weights = jnp.where(faults.dropped, 0.0, weights)
+        new_locals = F.select_clients(faults.dropped, locals_stacked, trained)
     new_global = strat.aggregate(
-        flm, global_params, trained, unit_masks, weights, compact=compact,
+        flm, global_params, reported, unit_masks, agg_weights, compact=compact,
         mask_trees=mask_trees if fused else None,
         kernel_mode=kernel_mode if fused else "ref",
     )
-    return new_global, trained, losses, fracs
+    return new_global, new_locals, losses, fracs
 
 
 def _compact_mask_shapes(flm: FLModel, global_params):
@@ -192,7 +225,7 @@ def _compact_mask_shapes(flm: FLModel, global_params):
     )
 
 
-def fl_round_scan(flm: FLModel, global_params, locals_stacked, keys, p_ratios, batches, weights, method, lr, compact: bool = True, *, fused: bool = True, kernel_mode: str = "auto"):
+def fl_round_scan(flm: FLModel, global_params, locals_stacked, keys, p_ratios, batches, weights, method, lr, compact: bool = True, *, fused: bool = True, kernel_mode: str = "auto", faults=None, client_globals=None, corrupt_scale: float = 10.0):
     """Sequential-cohort round: clients scanned one at a time so only one
     client's activations live at once; running masked sums implement the
     same aggregation. Used when per-client models are FSDP-sharded.
@@ -202,7 +235,11 @@ def fl_round_scan(flm: FLModel, global_params, locals_stacked, keys, p_ratios, b
     param-shaped tree. The aggregation itself stays a streaming jnp sum
     (one client at a time — nothing for the batch kernel to batch over);
     ``fused``/``kernel_mode`` route the local step through the kernel
-    dispatch and reuse the step's mask tree instead of re-expanding."""
+    dispatch and reuse the step's mask tree instead of re-expanding.
+
+    ``faults``/``client_globals``/``corrupt_scale`` follow the
+    ``fl_round_vmap`` fault semantics, one client at a time inside the
+    scan body; ``faults=None`` keeps the trace bit-identical."""
 
     strat = _resolve(method)
     num0 = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), global_params)
@@ -215,20 +252,34 @@ def fl_round_scan(flm: FLModel, global_params, locals_stacked, keys, p_ratios, b
 
     def body(carry, xs):
         num, den = carry
-        local_p, key, p_ratio, b, w = xs
+        local_p, key, p_ratio, b, w = xs[:5]
+        fault, client_g = None, None
+        rest = xs[5:]
+        if faults is not None:
+            fault, rest = rest[0], rest[1:]
+        if client_globals is not None:
+            (client_g,) = rest
+        start_g = global_params if client_g is None else client_g
         trained, unit_masks, step_masks, loss, frac = _client_round(
-            flm, global_params, local_p, key, p_ratio, b, strat, lr,
+            flm, start_g, local_p, key, p_ratio, b, strat, lr,
             fused=fused, kernel_mode=kernel_mode,
         )
         if fused:
             mask_tree = step_masks
         else:
             mask_tree = normalize_mask_tree(trained, flm.expand(trained, unit_masks))
+        reported, new_local = trained, trained
+        if fault is not None:
+            from repro.core import faults as F
+
+            reported = F.corrupt_reported(trained, start_g, fault.corrupt, corrupt_scale)
+            new_local = F.tree_select(fault.dropped, local_p, trained)
+            w = jnp.where(fault.dropped, 0.0, w)
         if compact:
             num = M._tree3(
                 lambda n, t, m: n + jnp.where(m, w * t.astype(jnp.float32), 0.0),
                 num,
-                trained,
+                reported,
                 mask_tree,
             )
             den = M._tree2(lambda d, m: d + w * m.astype(jnp.float32), den, mask_tree)
@@ -236,7 +287,7 @@ def fl_round_scan(flm: FLModel, global_params, locals_stacked, keys, p_ratios, b
             num = M._tree3(
                 lambda n, t, m: n + w * jnp.broadcast_to(m, t.shape).astype(jnp.float32) * t.astype(jnp.float32),
                 num,
-                trained,
+                reported,
                 mask_tree,
             )
             den = M._tree2(
@@ -244,10 +295,15 @@ def fl_round_scan(flm: FLModel, global_params, locals_stacked, keys, p_ratios, b
                 den,
                 mask_tree,
             )
-        return (num, den), (trained, loss, frac)
+        return (num, den), (new_local, loss, frac)
 
+    xs = [locals_stacked, keys, p_ratios, batches, weights]
+    if faults is not None:
+        xs.append(faults)
+    if client_globals is not None:
+        xs.append(client_globals)
     (num, den), (new_locals, losses, fracs) = jax.lax.scan(
-        body, (num0, den0), (locals_stacked, keys, p_ratios, batches, weights)
+        body, (num0, den0), tuple(xs)
     )
     new_global = jax.tree.map(
         lambda g, n, d: jnp.where(d > 0, n / jnp.maximum(d, 1e-12), g.astype(jnp.float32)).astype(g.dtype),

@@ -56,6 +56,7 @@ import numpy as np
 
 from repro.configs.base import FLConfig
 from repro.core import fedspu
+from repro.core import faults as F
 from repro.data import device_store as ds
 
 # Stream tag separating the data keys (cohort selection + minibatch
@@ -82,6 +83,12 @@ class BlockResult:
     prev_loss: np.ndarray  # [N] f32 ES prev combined loss
     stopped: np.ndarray  # [N] bool ES stop mask
     wall_time_s: float
+    # fault-injection extras (docs/ROBUSTNESS.md) — None when the run is
+    # fault-free (the fault-free trace is untouched)
+    dropped: Optional[np.ndarray] = None  # [R, K] bool — client never reported
+    rolled_back: Optional[np.ndarray] = None  # [R] bool — guard reverted the round
+    quarantined: Optional[np.ndarray] = None  # [N] bool — post-block quarantine set
+    gp_hist: Any = None  # [S+1, ...] device pytree — straggler global history
 
     @property
     def rounds_executed(self) -> int:
@@ -237,11 +244,16 @@ class BlockRunner:
             test_losses = eval_cohort(new_l, tb).astype(jnp.float32)
             return new_g, new_l, losses.astype(jnp.float32), test_losses, jnp.where(valid, fracs.astype(jnp.float32), 0.0)
 
-        def finish_round(cohort, valid, go, train_losses, test_losses, prev, stopped):
+        def finish_round(cohort, valid, go, train_losses, test_losses, prev, stopped, report=None):
             """Cheap [N]/[K] bookkeeping, unconditional: Eq. 6 combine and
-            the Algorithm 2 stop rule (stop iff L_t > L_{t-1})."""
+            the Algorithm 2 stop rule (stop iff L_t > L_{t-1}). ``report``
+            (fault path only) excludes dropped clients from the ES/prev
+            updates — they never reported, so the server learns nothing
+            about them — while ``out["valid"]`` keeps every sampled slot
+            (dropped clients still count as participants)."""
             combined = lam * train_losses + (1.0 - lam) * test_losses
-            live = valid & go
+            out_valid = valid & go
+            live = out_valid if report is None else out_valid & report
             prev_c = prev[cohort]
             if es_enabled:
                 stopped = stopped.at[cohort].set(
@@ -249,7 +261,7 @@ class BlockRunner:
                 )
             prev = prev.at[cohort].set(jnp.where(live, combined, prev_c))
             out = dict(
-                executed=go, cohort=cohort, valid=live,
+                executed=go, cohort=cohort, valid=out_valid,
                 train=train_losses, test=test_losses, combined=combined,
             )
             return prev, stopped, out
@@ -307,10 +319,120 @@ class BlockRunner:
             _, gp, local_store, prev, stopped = carry
             return gp, local_store, prev, stopped, outs
 
+        # Fault injection in the fused block (docs/ROBUSTNESS.md): the
+        # fault draws, straggler global history, divergence guard and
+        # quarantine set all live in the scan carry — the whole chaos
+        # round stays one jitted scan. Built only when faults/guard are
+        # configured; the fault-free variants above keep their exact
+        # pre-fault trace.
+        fault_model = F.build_fault_model(fl)
+        guard = fl.divergence_guard
+        self._faulty = fault_model is not None or guard
+        use_hist = fault_model is not None and fault_model.stragglers_enabled
+        self._use_hist = use_hist
+        corrupt_scale = fl.fault_spec.corrupt_scale if fl.fault_spec is not None else 10.0
+
+        def train_eval_f(t, gp, locals_c, cohort, valid, draw, gp_hist, store, test_stack, p_all, w_all):
+            """``train_eval`` with the fault kwargs threaded into the
+            engine and the divergence guard applied on device: a
+            non-finite aggregate rolls the global back to the carry's
+            (finite-by-induction) value via ``tree_select``."""
+            batch_key = jax.random.split(jax.random.fold_in(data_base, t))[1]
+            keys = jax.random.split(jax.random.fold_in(base_key, t), K)
+            p_ratios = p_all[cohort]
+            weights = jnp.where(valid, w_all[cohort], 0.0)
+            batches = ds.cohort_batches(store, cohort, batch_key, steps, batch)
+            if _constrain is not None:
+                locals_c = _constrain(locals_c)
+                batches = _constrain(batches)
+            fkw: Dict[str, Any] = {}
+            if fault_model is not None:
+                fkw["faults"] = draw
+                fkw["corrupt_scale"] = corrupt_scale
+                if use_hist:
+                    fkw["client_globals"] = F.gather_stale_globals(gp_hist, draw.staleness)
+            new_g, new_l, losses, fracs = round_fn(
+                flm, gp, locals_c, keys, p_ratios, batches, weights,
+                strategy, fl.lr, compact=fl.compact_agg,
+                fused=fl.fused_round, kernel_mode=fl.kernel_mode, **fkw,
+            )
+            ok = jnp.array(True)
+            if guard:
+                ok = F.tree_finite(new_g)
+                new_g = F.tree_select(ok, new_g, gp)
+            new_l = jax.tree.map(
+                lambda nl, ol: jnp.where(_valid_expand(valid, nl), nl, ol), new_l, locals_c
+            )
+            tb = {k: v[cohort] for k, v in test_stack.items()}
+            test_losses = eval_cohort(new_l, tb).astype(jnp.float32)
+            return (
+                new_g, new_l, losses.astype(jnp.float32), test_losses,
+                jnp.where(valid, fracs.astype(jnp.float32), 0.0), ok,
+            )
+
+        def block_faulty(t0, t_limit, gp, local_store, prev, stopped, store, test_stack, p_all, w_all, gp_hist, quarantined):
+            """Gated variant with faults: per-round [K] fault masks drawn
+            on device, stale globals gathered from the carried history,
+            guard rollback + quarantine updates in the carry."""
+
+            def body(carry, _):
+                t, gp, local_store, prev, stopped, gp_hist, quarantined = carry
+                go = t < t_limit
+                if es_enabled:
+                    go = go & ~jnp.all(stopped)
+                # quarantined clients leave the pool exactly like stopped
+                # ones (the host loop's _pool filter)
+                if es_enabled and guard:
+                    inactive = stopped | quarantined
+                elif es_enabled:
+                    inactive = stopped
+                elif guard:
+                    inactive = quarantined
+                else:
+                    inactive = None
+                cohort, valid = select_cohort(t, inactive)
+                draw = fault_model.draw(t, cohort) if fault_model is not None else None
+                locals_c = jax.tree.map(lambda s: s[cohort], local_store)
+                z = jnp.zeros((K,), jnp.float32)
+                new_g, new_l, tr, te, fr, ok = jax.lax.cond(
+                    go,
+                    lambda op: train_eval_f(t, *op, store, test_stack, p_all, w_all),
+                    lambda op: (op[0], op[1], z, z, z, jnp.array(True)),
+                    (gp, locals_c, cohort, valid, draw, gp_hist),
+                )
+                local_store = jax.tree.map(lambda s, u: s.at[cohort].set(u), local_store, new_l)
+                report = None if fault_model is None else ~draw.dropped
+                prev, stopped, out = finish_round(
+                    cohort, valid, go, tr, te, prev, stopped, report=report
+                )
+                out["fracs"] = fr
+                out["dropped"] = jnp.zeros((K,), bool) if draw is None else draw.dropped
+                out["rolled_back"] = (go & ~ok) if guard else jnp.array(False)
+                if guard:
+                    contrib = valid if report is None else valid & report
+                    quarantined = quarantined.at[cohort].set(
+                        quarantined[cohort] | ((go & ~ok) & contrib)
+                    )
+                if use_hist:
+                    pushed = F.push_history(gp_hist, new_g)
+                    gp_hist = jax.tree.map(
+                        lambda h, p: jnp.where(go, p, h), gp_hist, pushed
+                    )
+                return (t + 1, new_g, local_store, prev, stopped, gp_hist, quarantined), out
+
+            carry, outs = jax.lax.scan(
+                body, (t0, gp, local_store, prev, stopped, gp_hist, quarantined), None, length=R
+            )
+            _, gp, local_store, prev, stopped, gp_hist, quarantined = carry
+            return gp, local_store, prev, stopped, gp_hist, quarantined, outs
+
         donate = (2, 3, 4, 5) if fl.donate_buffers else ()
+        self._jit_faulty = None
         if mesh is None:
             self._jit_full = jax.jit(block_full, donate_argnums=donate)
             self._jit_gated = jax.jit(block_gated, donate_argnums=donate)
+            if self._faulty:
+                self._jit_faulty = jax.jit(block_faulty, donate_argnums=donate)
         else:
             # Explicit block-boundary shardings: global params replicated
             # (every shard aggregates into the same model), everything
@@ -332,10 +454,22 @@ class BlockRunner:
             self._jit_gated = jax.jit(
                 block_gated, donate_argnums=donate, in_shardings=in_sh, out_shardings=out_sh
             )
+            if self._faulty:
+                # gp_hist replicated (it mirrors the global), quarantine
+                # mask partitioned over the client axis like stopped
+                self._jit_faulty = jax.jit(
+                    block_faulty,
+                    donate_argnums=donate,
+                    in_shardings=in_sh + (rep_shard, row_shard),
+                    out_shardings=(
+                        rep_shard, row_shard, row_shard, row_shard,
+                        rep_shard, row_shard, rep_shard,
+                    ),
+                )
         self._es_enabled = es_enabled
 
     # ------------------------------------------------------------------
-    def run_block(self, t_start: int, global_params, local_store, prev_loss, stopped, t_limit: Optional[int] = None):
+    def run_block(self, t_start: int, global_params, local_store, prev_loss, stopped, t_limit: Optional[int] = None, *, gp_hist=None, quarantined=None):
         """Run one fused block of up to ``R`` rounds starting at absolute
         round ``t_start``, bounded by ``t_limit`` (the run's total round
         budget; ``None`` = unbounded). Returns ``(new_global,
@@ -344,13 +478,26 @@ class BlockRunner:
 
         Dispatches the cond-free fast variant whenever neither the stop
         mask nor the round budget can bite this block (no ES, full block
-        within the budget); otherwise the gated variant."""
+        within the budget); otherwise the gated variant. With faults or
+        the divergence guard configured, the fault-aware variant runs
+        instead, threading ``gp_hist`` (straggler global history) and
+        ``quarantined`` through the scan carry."""
         if t_limit is None:
             t_limit = 2**31 - 1
-        full = (not self._es_enabled) and t_start + self.R <= t_limit
-        fn = self._jit_full if full else self._jit_gated
+        if self._faulty:
+            fn = self._jit_faulty
+        else:
+            full = (not self._es_enabled) and t_start + self.R <= t_limit
+            fn = self._jit_full if full else self._jit_gated
         prev_loss = np.asarray(prev_loss, np.float32)
         stopped = np.asarray(stopped, bool)
+        if self._faulty:
+            quarantined = np.asarray(
+                np.zeros(self.N, bool) if quarantined is None else quarantined, bool
+            )
+            if gp_hist is None:
+                # no stragglers: a leafless dummy threads through the carry
+                gp_hist = jnp.zeros((0,), jnp.float32)
         if self.N_pad != self.N:
             # phantom pad clients: params wrap real rows (benign garbage —
             # only ever touched on invalid slots), start stopped with an
@@ -364,11 +511,13 @@ class BlockRunner:
             )
             prev_loss = np.concatenate([prev_loss, np.full(pad, np.inf, np.float32)])
             stopped = np.concatenate([stopped, np.ones(pad, bool)])
+            if self._faulty:
+                # phantom pad clients are born quarantined: never selected
+                quarantined = np.concatenate([quarantined, np.ones(pad, bool)])
             # the concat result is committed with the incoming layout;
             # jit's in_shardings only accepts matching/uncommitted args
             local_store = jax.device_put(local_store, self._row_shard)
-        t0 = time.perf_counter()
-        out = fn(
+        args = [
             jnp.asarray(t_start, jnp.int32),
             jnp.asarray(t_limit, jnp.int32),
             global_params,
@@ -379,14 +528,24 @@ class BlockRunner:
             self.test_stack,
             self.p_ratios_all,
             self.weights_all,
-        )
+        ]
+        if self._faulty:
+            args += [gp_hist, jnp.asarray(quarantined)]
+        t0 = time.perf_counter()
+        out = fn(*args)
         jax.block_until_ready(out)
         wall = time.perf_counter() - t0
-        gp, local_store, prev, stopped_out, m = out
+        hist_out = quar_out = None
+        if self._faulty:
+            gp, local_store, prev, stopped_out, hist_out, quar_out, m = out
+        else:
+            gp, local_store, prev, stopped_out, m = out
         if self.N_pad != self.N:
             local_store = jax.tree.map(lambda s: s[: self.N], local_store)
             prev = prev[: self.N]
             stopped_out = stopped_out[: self.N]
+            if quar_out is not None:
+                quar_out = quar_out[: self.N]
         result = BlockResult(
             executed=np.asarray(m["executed"]),
             cohorts=np.asarray(m["cohort"]),
@@ -398,6 +557,10 @@ class BlockRunner:
             prev_loss=np.asarray(prev),
             stopped=np.asarray(stopped_out),
             wall_time_s=wall,
+            dropped=np.asarray(m["dropped"]) if "dropped" in m else None,
+            rolled_back=np.asarray(m["rolled_back"]) if "rolled_back" in m else None,
+            quarantined=None if quar_out is None else np.asarray(quar_out),
+            gp_hist=hist_out if self._use_hist else None,
         )
         return gp, local_store, result
 
@@ -435,8 +598,12 @@ def host_reference_run(fed, rounds: int):
     data_base = jax.random.fold_in(base_key, DATA_STREAM)
     eval_cohort = jax.jit(fedspu.cohort_eval(fed.flm.loss_fn))
 
+    fault_model = getattr(fed, "fault_model", None)
+    guard = fl.divergence_guard
     gp = jax.tree.map(lambda x: x.copy(), fed.global_params)
     local_store = jax.tree.map(lambda x: x.copy(), fed.local_params)
+    gp_hist = fed._gp_hist  # straggler history (None when disabled)
+    quarantined = np.zeros(N, bool)
     prev = np.full(N, np.inf, np.float32)
     stopped = np.zeros(N, bool)
     records = []
@@ -446,9 +613,10 @@ def host_reference_run(fed, rounds: int):
         data_key = jax.random.fold_in(data_base, t)
         cohort_key, batch_key = jax.random.split(data_key)
         scores = np.asarray(jax.random.uniform(cohort_key, (N,)))
-        scores = np.where(stopped, -1.0, scores)
+        inactive = stopped | quarantined
+        scores = np.where(inactive, -1.0, scores)
         cohort = np.argsort(-scores, kind="stable")[:K]
-        n_active = int((~stopped).sum())
+        n_active = int((~inactive).sum())
         valid = np.arange(K) < min(K, n_active)
         cohort_d = jnp.asarray(cohort)
         batches = ds.cohort_batches(store, cohort_d, batch_key, steps, batch)
@@ -456,7 +624,20 @@ def host_reference_run(fed, rounds: int):
         p_ratios = fed.p_ratios_all[cohort_d]
         weights = jnp.where(jnp.asarray(valid), fed.weights_all[cohort_d], 0.0)
         locals_c = jax.tree.map(lambda s: s[cohort_d], local_store)
-        new_g, new_l, losses, _ = fed._round_fn(gp, locals_c, keys, p_ratios, batches, weights)
+        fkw = {}
+        reporting = np.ones(K, bool)
+        if fault_model is not None:
+            draw = fault_model.draw(t, cohort_d)
+            fkw["faults"] = draw
+            if gp_hist is not None:
+                fkw["client_globals"] = F.gather_stale_globals(gp_hist, draw.staleness)
+            reporting = ~np.asarray(draw.dropped)
+        new_g, new_l, losses, _ = fed._round_fn(gp, locals_c, keys, p_ratios, batches, weights, **fkw)
+        rolled_back = False
+        if guard and not bool(F.tree_finite(new_g)):
+            new_g = gp  # guard keeps gp out of donation, so it survives
+            quarantined[cohort[valid & reporting]] = True
+            rolled_back = True
         locals_c = jax.tree.map(lambda s: s[cohort_d], local_store)  # re-gather (donated)
         new_l = jax.tree.map(
             lambda nl, ol: jnp.where(_valid_expand(jnp.asarray(valid), nl), nl, ol),
@@ -465,16 +646,22 @@ def host_reference_run(fed, rounds: int):
         )
         local_store = jax.tree.map(lambda s, u: s.at[cohort_d].set(u), local_store, new_l)
         gp = new_g
+        if gp_hist is not None:
+            gp_hist = F.push_history(gp_hist, gp)
         tb = {k: v[cohort_d] for k, v in test_stack.items()}
         test_losses = np.asarray(eval_cohort(new_l, tb), np.float32)
         train_losses = np.asarray(losses, np.float32)
         combined = (fl.split_lambda * train_losses + (1.0 - fl.split_lambda) * test_losses).astype(np.float32)
-        for i in np.where(valid)[0]:
+        for i in np.where(valid & reporting)[0]:
             c = int(cohort[i])
             if es_on and combined[i] > prev[c]:
                 stopped[c] = True
             prev[c] = combined[i]
         records.append(
-            dict(t=t, cohort=cohort, valid=valid, train=train_losses, test=test_losses, combined=combined)
+            dict(
+                t=t, cohort=cohort, valid=valid, train=train_losses,
+                test=test_losses, combined=combined,
+                reporting=reporting, rolled_back=rolled_back,
+            )
         )
     return gp, local_store, records

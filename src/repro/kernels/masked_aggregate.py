@@ -17,6 +17,71 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 BM, BN = 256, 256
+# trimmed-mean tiles are smaller: the whole client axis lives in VMEM
+# per tile (trimming needs all C values of a coordinate at once).
+TBM, TBN = 128, 128
+
+
+def _trim_valid(v, valid, k: int):
+    """Invalidate the k largest and k smallest valid entries along the
+    client axis (axis 0), coordinate-wise. Ties break to the lowest
+    client index (argmax/argmin semantics) — the ref path and the Pallas
+    kernel share this helper so the two are bit-identical.
+    """
+    cidx = jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)
+    for _ in range(k):
+        imax = jnp.argmax(jnp.where(valid, v, -jnp.inf), axis=0)
+        valid = valid & (cidx != imax[None])
+        imin = jnp.argmin(jnp.where(valid, v, jnp.inf), axis=0)
+        valid = valid & (cidx != imin[None])
+    return valid
+
+
+def _trimmed_kernel(w_ref, m_ref, wt_ref, g_ref, o_ref, *, k: int):
+    v = w_ref[...].astype(jnp.float32)  # [C, bm, bn]
+    wt = wt_ref[...].reshape(-1)[:, None, None]  # [C, 1, 1]
+    valid = (m_ref[...] > 0) & (wt > 0) & jnp.isfinite(v)
+    npart = jnp.sum(valid.astype(jnp.int32), axis=0)
+    valid = _trim_valid(v, valid, k)
+    num = jnp.sum(jnp.where(valid, wt * v, 0.0), axis=0)
+    den = jnp.sum(jnp.where(valid, jnp.broadcast_to(wt, v.shape), 0.0), axis=0)
+    ok = (npart > 2 * k) & (den > 0)
+    o_ref[...] = jnp.where(
+        ok, num / jnp.maximum(den, 1e-12), g_ref[...].astype(jnp.float32)
+    ).astype(o_ref.dtype)
+
+
+def trimmed_aggregate(w_stack, row_masks, weights, g_old, *, k: int = 1, bm: int = 0, bn: int = 0, interpret: bool = True):
+    """Coordinate-wise trimmed masked mean (docs/ROBUSTNESS.md).
+
+    w_stack: [C, M, N]; row_masks: [C, M] bool; weights: [C]; g_old:
+    [M, N]. Per coordinate: among participating clients (row active,
+    weight > 0, value finite) drop the ``k`` largest and ``k`` smallest
+    values, weighted-average the rest; coordinates with fewer than
+    ``2k + 1`` participants keep the old global value. Unlike Fig. 9's
+    streaming sum, the whole client axis is resident per tile — grid is
+    (M/bm, N/bn) with no client dimension.
+    """
+    c, m, n = w_stack.shape
+    bm = bm or min(TBM, m)
+    bn = bn or min(TBN, n)
+    assert m % bm == 0 and n % bn == 0, (w_stack.shape, bm, bn)
+    masks3d = row_masks.astype(jnp.float32)[:, :, None]  # [C, M, 1]
+    wts2d = weights.astype(jnp.float32)[:, None]  # [C, 1]
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_trimmed_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c, bm, bn), lambda i, j: (0, i, j)),
+            pl.BlockSpec((c, bm, 1), lambda i, j: (0, i, 0)),
+            pl.BlockSpec((c, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), g_old.dtype),
+        interpret=interpret,
+    )(w_stack, masks3d, wts2d, g_old)
 
 
 def _kernel(w_ref, m_ref, wt_ref, g_ref, o_ref, num_ref, den_ref, *, nc: int):

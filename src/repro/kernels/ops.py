@@ -124,6 +124,30 @@ def masked_aggregate(w_stack, row_masks, weights, g_old, mode: str = "auto"):
     return out[:m0, :n0].reshape(orig_shape)
 
 
+def masked_trimmed_aggregate(w_stack, row_masks, weights, g_old, k: int = 1, mode: str = "auto"):
+    """Coordinate-wise trimmed masked mean over the client axis
+    (docs/ROBUSTNESS.md). Same layout contract as ``masked_aggregate``."""
+    mode = _resolve(mode)
+    if mode == "ref":
+        return _trimmed_leaf_ref(g_old, w_stack, row_masks[:, :, None], weights, k)
+    c = w_stack.shape[0]
+    orig_shape = g_old.shape
+    w2 = w_stack.reshape(c, w_stack.shape[1], -1)
+    g2 = g_old.reshape(g_old.shape[0], -1)
+    m0, n0 = g2.shape
+    pm, bm = _tile_pad(m0, agg_k.TBM, 8)
+    pn, bn = _tile_pad(n0, agg_k.TBN, 128)
+    w2, _ = _pad_to(w2, pm, 1)
+    g2, _ = _pad_to(g2, pm, 0)
+    w2, _ = _pad_to(w2, pn, 2)
+    g2, _ = _pad_to(g2, pn, 1)
+    masks, _ = _pad_to(row_masks, pm, 1)
+    out = agg_k.trimmed_aggregate(
+        w2, masks, weights, g2, k=k, bm=bm, bn=bn, interpret=(mode == "interpret")
+    )
+    return out[:m0, :n0].reshape(orig_shape)
+
+
 def flash_attention(q, k, v, window: Optional[int] = None, mode: str = "auto"):
     """Blocked causal attention. q: [B, H, S, hd]; k, v: [B, KV, S, hd]."""
     mode = _resolve(mode)
@@ -257,6 +281,62 @@ def masked_aggregate_tree(global_params, trained_stacked, mask_trees, weights, m
         treedef,
         [
             _masked_aggregate_leaf(g, p, m, weights, mode, compact)
+            for g, p, m in zip(lg, lp, lm)
+        ],
+    )
+
+
+def _trimmed_leaf_ref(g, pc, mc, weights, k: int):
+    """Pure-jnp trimmed masked mean for one leaf (pc/mc client axis 0).
+
+    Participation per coordinate = mask & weight > 0 & finite value; the
+    k extremes of the participants are dropped via the same
+    ``_trim_valid`` helper the Pallas kernel uses (bit-identical paths);
+    coordinates with ≤ 2k participants keep the old global value.
+    """
+    v = pc.astype(jnp.float32)
+    if mc is True:
+        mc = jnp.ones((1,) * v.ndim, bool)
+    wt = weights.reshape(weights.shape + (1,) * (v.ndim - 1)).astype(jnp.float32)
+    valid = jnp.broadcast_to(mc, v.shape) & (wt > 0) & jnp.isfinite(v)
+    npart = jnp.sum(valid.astype(jnp.int32), axis=0)
+    valid = agg_k._trim_valid(v, valid, k)
+    num = jnp.sum(jnp.where(valid, wt * v, 0.0), axis=0)
+    den = jnp.sum(jnp.where(valid, jnp.broadcast_to(wt, v.shape), 0.0), axis=0)
+    ok = (npart > 2 * k) & (den > 0)
+    return jnp.where(ok, num / jnp.maximum(den, 1e-12), g.astype(jnp.float32)).astype(g.dtype)
+
+
+def _masked_trimmed_leaf(g, pc, mc, weights, k: int, mode: str):
+    if mc is True:
+        return _trimmed_leaf_ref(g, pc, mc, weights, k)
+    masked, free = _split_mask_axes(mc.shape[1:])  # dim 0 = clients
+    if mode == "ref" or not masked:
+        return _trimmed_leaf_ref(g, pc, mc, weights, k)
+    perm = masked + free  # axes of g
+    rows = mc.transpose((0,) + tuple(a + 1 for a in perm)).reshape(mc.shape[0], -1)
+    pc2 = pc.transpose((0,) + tuple(a + 1 for a in perm)).reshape(
+        pc.shape[0], rows.shape[1], -1
+    )
+    g2 = g.transpose(perm).reshape(rows.shape[1], -1)
+    out = masked_trimmed_aggregate(pc2, rows, weights, g2, k=k, mode=mode)
+    shp = tuple(g.shape[a] for a in perm)
+    return out.reshape(shp).transpose(_inv_perm(perm))
+
+
+def masked_trimmed_aggregate_tree(global_params, trained_stacked, mask_trees, weights, k: int = 1, mode: str = "auto"):
+    """Trimmed-mean variant of ``masked_aggregate_tree`` — the robust
+    aggregation backend (strategies/robust.py). The denominator is
+    inherently per-coordinate (participation varies coordinate-wise after
+    trimming), so there is no ``compact`` knob."""
+    mode = _resolve(mode)
+    lg, treedef = jax.tree.flatten(global_params)
+    lp = treedef.flatten_up_to(trained_stacked)
+    lm = treedef.flatten_up_to(mask_trees)
+    return jax.tree.unflatten(
+        treedef,
+        [
+            _masked_trimmed_leaf(g, p, m, weights, k, mode)
             for g, p, m in zip(lg, lp, lm)
         ],
     )

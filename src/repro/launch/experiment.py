@@ -26,7 +26,7 @@ import json
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Union
 
-from repro.configs import FLConfig, ModelConfig
+from repro.configs import FLConfig, FaultSpec, ModelConfig
 from repro.core.federation import Federation, FederatedTask
 from repro.data import partition, synthetic
 from repro.models import cnn
@@ -50,6 +50,11 @@ class ExperimentSpec:
     param_bytes: int = 4
     eval_every: int = 0
     data_seed: Optional[int] = None  # defaults to fl.seed
+    # checkpoint/resume (docs/ROBUSTNESS.md): write full run state every
+    # N rounds; resume=True restores the latest checkpoint and continues
+    checkpoint_every: int = 0
+    ckpt_dir: Optional[str] = None
+    resume: bool = False
 
     def dataset_name(self) -> str:
         """Stable name of the dataset/config for history payloads."""
@@ -114,7 +119,12 @@ def build_federation(spec: ExperimentSpec, **kw) -> Federation:
 def run(spec: ExperimentSpec, out_path: Optional[str] = None, **kw) -> Dict[str, Any]:
     """config → federation → history JSON (optionally written to disk)."""
     fed = build_federation(spec, **kw)
-    hist = fed.run(eval_every=spec.eval_every)
+    hist = fed.run(
+        eval_every=spec.eval_every,
+        checkpoint_every=spec.checkpoint_every,
+        ckpt_dir=spec.ckpt_dir,
+        resume=spec.resume,
+    )
     payload = dict(
         dataset=spec.dataset_name(),
         method=fed.strategy.name,
@@ -170,12 +180,53 @@ def main(argv=None) -> int:
         "--mesh-model", type=int, default=1,
         help="model (TP) axis size of the mesh (with --mesh-data)",
     )
+    # fault injection / robustness (docs/ROBUSTNESS.md)
+    ap.add_argument("--fault-dropout", type=float, default=0.0,
+                    help="per-round client dropout probability")
+    ap.add_argument("--fault-straggler", type=float, default=0.0,
+                    help="per-round straggler probability (stale global start)")
+    ap.add_argument("--fault-staleness", type=int, default=1,
+                    help="max staleness (rounds) for stragglers")
+    ap.add_argument("--fault-corrupt", type=float, default=0.0,
+                    help="per-round Byzantine-corruption probability")
+    ap.add_argument("--fault-kind", choices=["nan", "sign_flip", "scale", "mix"],
+                    default="nan", help="corruption kind")
+    ap.add_argument("--fault-scale", type=float, default=10.0,
+                    help="update-scaling factor for scale corruption")
+    from repro.configs.base import ROBUST_AGGS
+    ap.add_argument("--robust-agg", choices=list(ROBUST_AGGS), default=None,
+                    help="server-side robust aggregation defense")
+    ap.add_argument("--robust-clip", type=float, default=10.0,
+                    help="norm threshold for norm_clip/norm_reject")
+    ap.add_argument("--robust-trim-k", type=int, default=1,
+                    help="per-coordinate trim count for trimmed_mean")
+    ap.add_argument("--divergence-guard", action="store_true",
+                    help="roll back non-finite aggregates and quarantine "
+                    "the contributing clients")
+    # checkpoint / resume (docs/ROBUSTNESS.md)
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="save full run state every N rounds (requires --ckpt-dir)")
+    ap.add_argument("--ckpt-dir", default=None, help="checkpoint directory")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint in --ckpt-dir and continue")
     ap.add_argument("--out", default=None, help="write history JSON here")
     args = ap.parse_args(argv)
     if args.mesh_model != 1 and not args.mesh_data:
         ap.error("--mesh-model requires --mesh-data (the mesh is only built "
                  "when a data-axis size is given)")
+    if (args.checkpoint_every or args.resume) and not args.ckpt_dir:
+        ap.error("--checkpoint-every/--resume require --ckpt-dir")
 
+    fault_spec = None
+    if args.fault_dropout or args.fault_straggler or args.fault_corrupt:
+        fault_spec = FaultSpec(
+            dropout=args.fault_dropout,
+            straggler=args.fault_straggler,
+            max_staleness=args.fault_staleness,
+            corrupt=args.fault_corrupt,
+            corrupt_kind=args.fault_kind,
+            corrupt_scale=args.fault_scale,
+        )
     spec = ExperimentSpec(
         fl=FLConfig(
             n_clients=args.clients,
@@ -190,11 +241,19 @@ def main(argv=None) -> int:
             rounds_per_block=args.rounds_per_block,
             on_device_data=args.on_device_data,
             mesh_shape=(args.mesh_data, args.mesh_model) if args.mesh_data else None,
+            fault_spec=fault_spec,
+            robust_agg=args.robust_agg,
+            robust_clip=args.robust_clip,
+            robust_trim_k=args.robust_trim_k,
+            divergence_guard=args.divergence_guard,
         ),
         dataset=args.dataset,
         samples=args.samples,
         steps_per_round=args.steps_per_round,
         eval_every=args.eval_every,
+        checkpoint_every=args.checkpoint_every,
+        ckpt_dir=args.ckpt_dir,
+        resume=args.resume,
     )
     payload = run(spec, out_path=args.out)
     hist = payload["history"]

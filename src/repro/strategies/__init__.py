@@ -18,3 +18,8 @@ from repro.strategies.builtin import (  # noqa: F401
     PruneFL,
     RandomDropout,
 )
+from repro.strategies.robust import (  # noqa: F401
+    RobustAggregate,
+    masked_update_norms,
+    robust_wrap,
+)

@@ -1,0 +1,153 @@
+"""Robust aggregation wrappers (docs/ROBUSTNESS.md).
+
+A ``RobustAggregate`` wraps any base Strategy: masks and merge delegate
+to the inner scheme unchanged; the ``aggregate`` hook applies a
+server-side defense *before* the Fig. 9 masked weighted average. Three
+defenses (``FLConfig(robust_agg=...)``):
+
+  norm_clip     — each client's masked update δ_c = m_c⊙(w_c − g) is
+                  scaled down to ‖δ_c‖ ≤ clip (gradient-norm clipping at
+                  the server); non-finite reports are dropped.
+  norm_reject   — SNIPPETS.md Snippet 1: clients with ‖δ_c‖ > clip (or a
+                  non-finite report) get weight 0. A round in which
+                  every client is rejected degrades to a no-op — the
+                  Fig. 9 fallback keeps the old global everywhere.
+  trimmed_mean  — coordinate-wise trimmed mean over participating
+                  clients (``ops.masked_trimmed_aggregate_tree``,
+                  Pallas-backed); the classic Byzantine-robust estimator.
+
+All three stay on the kernel substrate: norm_clip/norm_reject transform
+the report then reuse the stock ``masked_aggregate_tree`` (the Pallas
+Fig. 9 kernel); trimmed_mean has its own fused masked-row kernel.
+
+Wrappers are built per-run via ``robust_wrap`` (not registered: the
+registry holds base schemes; robustness is an orthogonal axis configured
+by ``FLConfig.robust_agg``). They require the ``vmap`` cohort layout —
+the scan layout streams running sums and never materializes the client
+axis an inter-client defense needs; ``Federation`` enforces this.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as M
+from repro.kernels import ops
+from repro.strategies.base import Strategy, resolve_strategy
+
+ROBUST_KINDS = ("norm_clip", "norm_reject", "trimmed_mean")
+
+
+def masked_update_norms(global_params, trained_stacked, mask_trees):
+    """[C] l2 norms of each client's masked update m_c⊙(w_c − g).
+
+    Non-finite leaves inside the mask make the norm non-finite (the
+    wrappers reject those clients); garbage *outside* the mask is ignored
+    — it never enters the aggregate either.
+    """
+    lg, treedef = jax.tree.flatten(global_params)
+    lp = treedef.flatten_up_to(trained_stacked)
+    lm = treedef.flatten_up_to(mask_trees)
+    total = None
+    for g, p, m in zip(lg, lp, lm):
+        d = p.astype(jnp.float32) - g.astype(jnp.float32)[None]
+        if m is not True:
+            d = jnp.where(jnp.broadcast_to(m, d.shape), d, 0.0)
+        sq = jnp.sum(d * d, axis=tuple(range(1, d.ndim)))
+        total = sq if total is None else total + sq
+    return jnp.sqrt(total)
+
+
+def _sanitize(global_params, trained_stacked, keep):
+    """Replace rejected clients' reports with the old global values.
+
+    Zero weight alone is not enough: 0·NaN = NaN would still poison the
+    aggregation numerator wherever the client's mask was active.
+    """
+    return jax.tree.map(
+        lambda g, p: jnp.where(
+            keep.reshape(keep.shape + (1,) * (p.ndim - 1)),
+            p,
+            g.astype(p.dtype)[None],
+        ),
+        global_params,
+        trained_stacked,
+    )
+
+
+def _scale_deltas(global_params, trained_stacked, factor):
+    """w'_c = g + factor_c·(w_c − g), per client."""
+
+    def leaf(g, p):
+        f = factor.reshape(factor.shape + (1,) * (p.ndim - 1))
+        g32 = g.astype(jnp.float32)[None]
+        return (g32 + f * (p.astype(jnp.float32) - g32)).astype(p.dtype)
+
+    return jax.tree.map(leaf, global_params, trained_stacked)
+
+
+class RobustAggregate(Strategy):
+    """Server-side robust aggregation over any base strategy."""
+
+    def __init__(self, inner, kind: str, *, clip: float = 10.0, trim_k: int = 1):
+        if kind not in ROBUST_KINDS:
+            raise ValueError(f"unknown robust kind {kind!r}; expected one of {ROBUST_KINDS}")
+        if trim_k < 1:
+            raise ValueError(f"trim_k must be >= 1, got {trim_k}")
+        self.inner = resolve_strategy(inner)
+        self.kind = kind
+        self.clip = float(clip)
+        self.trim_k = int(trim_k)
+        self.name = f"{self.inner.name}+{kind}"
+
+    # masks and merge are the inner scheme's, untouched
+    def sample_masks(self, flm, global_params, key, p_ratio, batch=None):
+        return self.inner.sample_masks(flm, global_params, key, p_ratio, batch)
+
+    def merge(self, flm, global_params, local_params, mask_tree):
+        return self.inner.merge(flm, global_params, local_params, mask_tree)
+
+    def aggregate(
+        self,
+        flm,
+        global_params,
+        trained_stacked,
+        unit_masks_stacked,
+        weights,
+        *,
+        compact: bool = False,
+        mask_trees=None,
+        kernel_mode: str = "ref",
+    ):
+        if mask_trees is None:
+            mask_trees = jax.vmap(
+                lambda p, um: M.normalize_mask_tree(p, flm.expand(p, um))
+            )(trained_stacked, unit_masks_stacked)
+        if self.kind == "trimmed_mean":
+            return ops.masked_trimmed_aggregate_tree(
+                global_params, trained_stacked, mask_trees, weights,
+                k=self.trim_k, mode=kernel_mode,
+            )
+        norms = masked_update_norms(global_params, trained_stacked, mask_trees)
+        finite = jnp.isfinite(norms)
+        if self.kind == "norm_reject":
+            keep = finite & (norms <= self.clip)
+            reported = _sanitize(global_params, trained_stacked, keep)
+        else:  # norm_clip
+            keep = finite
+            factor = jnp.where(
+                keep, jnp.minimum(1.0, self.clip / jnp.maximum(norms, 1e-12)), 0.0
+            )
+            reported = _sanitize(
+                global_params, _scale_deltas(global_params, trained_stacked, factor), keep
+            )
+        agg_weights = jnp.where(keep, weights, 0.0)
+        return ops.masked_aggregate_tree(
+            global_params, reported, mask_trees, agg_weights,
+            mode=kernel_mode, compact=compact,
+        )
+
+
+def robust_wrap(inner, kind: str, *, clip: float = 10.0, trim_k: int = 1) -> RobustAggregate:
+    """Wrap a base strategy (name or instance) with a robust aggregator."""
+    return RobustAggregate(inner, kind, clip=clip, trim_k=trim_k)

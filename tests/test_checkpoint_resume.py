@@ -1,0 +1,124 @@
+"""Crash-safe checkpoint/resume (docs/ROBUSTNESS.md).
+
+The contract: a run killed after round k and resumed from its checkpoint
+reproduces the uninterrupted run bit-for-bit — global params, every
+client's personal params, ES state, quarantine set, RNG streams, comm
+totals and the round history. Holds on both the host loop (numpy
+sampler state round-trips through JSON) and the block driver (jax.random
+streams are a pure function of the absolute round index).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig, FaultSpec
+from repro.launch import experiment
+from repro.models import cnn
+
+CFG = cnn.EMNIST_CNN
+
+
+def _fed(fl):
+    spec = experiment.ExperimentSpec(
+        fl=fl, dataset=CFG, samples=60 * fl.n_clients, steps_per_round=2
+    )
+    return experiment.build_federation(spec)
+
+
+def _drift(a, b):
+    return max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def _record_key(hist):
+    """Everything in a record except wall time (timing is not state)."""
+    skip = {"wall_time_s"}
+    return [
+        {k: v for k, v in dataclasses.asdict(r).items() if k not in skip}
+        for r in hist.records
+    ]
+
+
+HOST_FL = FLConfig(
+    n_clients=6, clients_per_round=3, max_rounds=6, batch_size=8, seed=5,
+    early_stopping=True,
+    fault_spec=FaultSpec(dropout=0.3, straggler=0.2, max_staleness=2, corrupt=0.2, corrupt_kind="sign_flip"),
+    robust_agg="norm_clip", divergence_guard=True,
+)
+
+BLOCK_FL = FLConfig(
+    n_clients=8, clients_per_round=4, max_rounds=6, batch_size=8, seed=7,
+    rounds_per_block=3, on_device_data=True,
+    fault_spec=FaultSpec(dropout=0.3, corrupt=0.3, corrupt_kind="nan"),
+    divergence_guard=True,
+)
+
+
+@pytest.mark.parametrize(
+    "fl,stop_after", [(HOST_FL, 3), (BLOCK_FL, 3)], ids=["host", "block"]
+)
+def test_killed_and_resumed_is_bitwise_identical(tmp_path, fl, stop_after):
+    d = str(tmp_path)
+    base = _fed(fl)
+    h_full = base.run(rounds=6)
+
+    # "crash" after stop_after rounds, then resume in a fresh process
+    first = _fed(fl)
+    first.run(rounds=stop_after, checkpoint_every=stop_after, ckpt_dir=d)
+    resumed = _fed(fl)
+    h_res = resumed.run(rounds=6, ckpt_dir=d, resume=True)
+
+    assert _drift(base.global_params, resumed.global_params) == 0.0
+    assert _drift(base.local_params, resumed.local_params) == 0.0
+    assert _record_key(h_full) == _record_key(h_res)
+    assert h_full.final_accuracy == h_res.final_accuracy
+    assert h_full.total_comm_gb == h_res.total_comm_gb
+    assert h_full.rounds_run == h_res.rounds_run
+    np.testing.assert_array_equal(base.quarantined, resumed.quarantined)
+    np.testing.assert_array_equal(
+        np.asarray(base.es_state.stopped), np.asarray(resumed.es_state.stopped)
+    )
+
+
+def test_save_restore_state_roundtrip(tmp_path):
+    """save_state -> restore_state into a *fresh* federation restores
+    every state component, including the straggler global history."""
+    fl = HOST_FL
+    fed = _fed(fl)
+    fed.run(rounds=2)
+    fed.save_state(str(tmp_path))
+    other = _fed(fl)
+    step = other.restore_state(str(tmp_path))
+    assert step == 2
+    assert _drift(fed.global_params, other.global_params) == 0.0
+    assert _drift(fed.local_params, other.local_params) == 0.0
+    assert _drift(fed._gp_hist, other._gp_hist) == 0.0  # stragglers on
+    np.testing.assert_array_equal(
+        np.asarray(fed.es_state.prev_loss), np.asarray(other.es_state.prev_loss)
+    )
+    assert fed.rng.bit_generator.state == other.rng.bit_generator.state
+    assert fed.comm.total_gb == other.comm.total_gb
+    assert _record_key(fed.history) == _record_key(other.history)
+
+
+def test_resume_without_checkpoint_starts_fresh(tmp_path):
+    """resume=True with an empty directory is a cold start, not an
+    error (first launch of a crash-looped job)."""
+    fl = FLConfig(n_clients=4, clients_per_round=2, max_rounds=2, batch_size=8, seed=0)
+    fed = _fed(fl)
+    hist = fed.run(rounds=2, ckpt_dir=str(tmp_path), resume=True)
+    assert hist.rounds_run == 2
+
+
+def test_checkpoint_args_validated():
+    fl = FLConfig(n_clients=4, clients_per_round=2, max_rounds=2, batch_size=8, seed=0)
+    fed = _fed(fl)
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        fed.run(rounds=1, checkpoint_every=1)
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        fed.run(rounds=1, resume=True)

@@ -1,0 +1,350 @@
+"""Fault injection (docs/ROBUSTNESS.md): seeded fault draws, corrupted
+reports, engine threading, the divergence guard and the fused block.
+
+Pins the contracts:
+
+  1. fault draws are a pure function of (seed, round, client id) —
+     invariant to cohort composition, block size and resume point;
+  2. with ``fault_spec=None`` nothing changes (the kwargs are never
+     passed, the traces are the pre-fault ones); a zero-rate spec is
+     value-identical on the vmap layout;
+  3. dropped clients keep their local params and contribute nothing to
+     the aggregate; corruption hits the *report* only (the client's own
+     personal model keeps its true trained values);
+  4. the divergence guard rolls a non-finite aggregate back to the last
+     finite global and quarantines the round's contributors;
+  5. the fused block driver replays the host fault semantics exactly
+     (``host_reference_run`` parity).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig, FaultSpec
+from repro.core import faults as F
+from repro.core import fedspu
+from repro.launch import experiment
+from repro.models import cnn
+
+CFG = cnn.EMNIST_CNN
+
+
+# ---------------------------------------------------------------------------
+# fault draws
+# ---------------------------------------------------------------------------
+
+
+def test_draws_deterministic_and_cohort_invariant():
+    """draw(t, c) depends only on (seed, t, c): the same client gets the
+    same fate regardless of who else was sampled — the host loop, the
+    fused block and a resumed run all see identical faults."""
+    spec = FaultSpec(dropout=0.4, straggler=0.3, max_staleness=3, corrupt=0.3, corrupt_kind="mix")
+    fm = F.FaultModel(spec, seed=7)
+    a = fm.draw(5, jnp.asarray([2, 9, 4], jnp.int32))
+    b = fm.draw(5, jnp.asarray([2, 9, 4], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(a.dropped), np.asarray(b.dropped))
+    np.testing.assert_array_equal(np.asarray(a.staleness), np.asarray(b.staleness))
+    np.testing.assert_array_equal(np.asarray(a.corrupt), np.asarray(b.corrupt))
+    # cohort-composition invariance: client 9 alone == client 9 in a trio
+    solo = fm.draw(5, jnp.asarray([9], jnp.int32))
+    assert bool(solo.dropped[0]) == bool(a.dropped[1])
+    assert int(solo.staleness[0]) == int(a.staleness[1])
+    assert int(solo.corrupt[0]) == int(a.corrupt[1])
+    # different rounds / different seeds decorrelate (wide cohort so a
+    # full fate collision is vanishingly unlikely)
+    wide = jnp.arange(64, dtype=jnp.int32)
+    r5, r6 = fm.draw(5, wide), fm.draw(6, wide)
+    other = F.FaultModel(spec, seed=8).draw(5, wide)
+    assert not np.array_equal(np.asarray(r5.dropped), np.asarray(r6.dropped))
+    assert not np.array_equal(np.asarray(r5.dropped), np.asarray(other.dropped))
+
+
+def test_draw_semantics():
+    """Rate-0 specs draw no faults; staleness is bounded by the spec and
+    zero for non-stragglers; dropped clients are never corrupt (they
+    never report anything to corrupt)."""
+    cohort = jnp.arange(64, dtype=jnp.int32)
+    quiet = F.FaultModel(FaultSpec(), seed=0).draw(0, cohort)
+    assert not bool(quiet.dropped.any())
+    assert not bool(quiet.corrupt.any())
+    assert not bool(quiet.staleness.any())
+    spec = FaultSpec(dropout=0.5, straggler=0.9, max_staleness=4, corrupt=0.9, corrupt_kind="mix")
+    noisy = F.FaultModel(spec, seed=1).draw(3, cohort)
+    st = np.asarray(noisy.staleness)
+    dr = np.asarray(noisy.dropped)
+    co = np.asarray(noisy.corrupt)
+    assert dr.any() and (st > 0).any() and (co != F.KIND_NONE).any()
+    assert st.max() <= spec.max_staleness and st.min() >= 0
+    assert (st[dr] == 0).all(), "dropped clients are not stragglers"
+    assert (co[dr] == F.KIND_NONE).all(), "dropped clients are not corrupt"
+    kinds = set(np.unique(co)) - {F.KIND_NONE}
+    assert kinds <= {F.KIND_NAN, F.KIND_SIGN, F.KIND_SCALE}
+
+
+def test_corrupt_reported_kinds():
+    """Per-kind report transforms: NaN poisoning, sign-flipped update,
+    scaled update; KIND_NONE passes the trained params through."""
+    g = {"w": jnp.asarray([[1.0, 2.0], [3.0, 4.0]])}
+    t = {"w": jnp.asarray([[1.5, 1.0], [3.0, 6.0]])}
+    rep = F.corrupt_reported(t, g, jnp.asarray(F.KIND_NONE), 10.0)
+    np.testing.assert_array_equal(np.asarray(rep["w"]), np.asarray(t["w"]))
+    rep = F.corrupt_reported(t, g, jnp.asarray(F.KIND_NAN), 10.0)
+    assert np.isnan(np.asarray(rep["w"])).all()
+    rep = F.corrupt_reported(t, g, jnp.asarray(F.KIND_SIGN), 10.0)
+    np.testing.assert_allclose(np.asarray(rep["w"]), [[0.5, 3.0], [3.0, 2.0]])
+    rep = F.corrupt_reported(t, g, jnp.asarray(F.KIND_SCALE), 10.0)
+    np.testing.assert_allclose(np.asarray(rep["w"]), [[6.0, -8.0], [3.0, 24.0]])
+
+
+def test_history_push_and_gather():
+    """The straggler history is a ring of the last S+1 globals; staleness
+    s indexes the global from s rounds ago (0 = current)."""
+    g = {"w": jnp.zeros((2,))}
+    hist = F.init_history(g, 2)
+    for v in (1.0, 2.0, 3.0):
+        hist = F.push_history(hist, {"w": jnp.full((2,), v)})
+    stale = F.gather_stale_globals(hist, jnp.asarray([0, 1, 2], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(stale["w"])[:, 0], [3.0, 2.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# engine threading
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def setup():
+    flm = fedspu.bind_cnn(CFG)
+    key = jax.random.PRNGKey(0)
+    gp = cnn.init_params(CFG, key)
+    C, steps, bs = 4, 2, 8
+    rng = np.random.default_rng(0)
+    locals_ = jax.tree.map(
+        lambda x: x[None] + 0.01 * jnp.asarray(rng.normal(size=(C,) + x.shape), x.dtype), gp
+    )
+    keys = jax.random.split(jax.random.PRNGKey(1), C)
+    batches = {
+        "x": jnp.asarray(rng.normal(size=(C, steps, bs) + CFG.in_shape), jnp.float32),
+        "y": jnp.asarray(rng.integers(0, CFG.n_classes, (C, steps, bs)), jnp.int32),
+    }
+    weights = jnp.asarray(rng.random(C) + 0.5, jnp.float32)
+    p = jnp.asarray([0.3, 0.5, 0.8, 1.0])
+    return flm, gp, locals_, keys, p, batches, weights
+
+
+def _round(setup, layout="vmap", **kw):
+    flm, gp, locals_, keys, p, batches, weights = setup
+    fn = fedspu.fl_round_vmap if layout == "vmap" else fedspu.fl_round_scan
+    jit = jax.jit(lambda g, l, k, pr, b, w: fn(flm, g, l, k, pr, b, w, "fedspu", 0.05, **kw))
+    return jit(gp, locals_, keys, p, batches, weights)
+
+
+def _drift(a, b):
+    return max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def test_zero_rate_faults_bitwise_noop_vmap(setup):
+    """A zero-rate FaultSpec draws no faults, and on the vmap layout the
+    fault-aware trace is bit-identical to the fault-free one. (The scan
+    layout is value-identical but may differ in low-order bits — the
+    extra select chain perturbs XLA:CPU fusion; docs/ROBUSTNESS.md.)"""
+    base = _round(setup, "vmap")
+    draw = F.FaultModel(FaultSpec(), seed=0).draw(0, jnp.arange(4, dtype=jnp.int32))
+    faulty = _round(setup, "vmap", faults=draw)
+    assert _drift(base[0], faulty[0]) == 0.0
+    assert _drift(base[1], faulty[1]) == 0.0
+    np.testing.assert_array_equal(np.asarray(base[2]), np.asarray(faulty[2]))
+
+
+def test_dropped_clients_keep_locals_and_leave_aggregate(setup):
+    """A dropped client's personal model is untouched and the aggregate
+    equals a round where that client's weight was zeroed."""
+    flm, gp, locals_, keys, p, batches, weights = setup
+    draw = F.FaultDraw(
+        dropped=jnp.asarray([False, True, False, False]),
+        staleness=jnp.zeros(4, jnp.int32),
+        corrupt=jnp.zeros(4, jnp.int32),
+    )
+    new_g, new_l, _, _ = _round(setup, "vmap", faults=draw)
+    # dropped client 1 keeps its exact local params
+    for nl, ol in zip(jax.tree.leaves(new_l), jax.tree.leaves(locals_)):
+        np.testing.assert_array_equal(np.asarray(nl)[1], np.asarray(ol)[1])
+    # aggregate as if client 1 had weight 0
+    fn = jax.jit(
+        lambda g, l, k, pr, b, w: fedspu.fl_round_vmap(flm, g, l, k, pr, b, w, "fedspu", 0.05)
+    )
+    ref_g, _, _, _ = fn(gp, locals_, keys, p, batches, weights * jnp.asarray([1.0, 0.0, 1.0, 1.0]))
+    assert _drift(new_g, ref_g) == 0.0
+
+
+def test_corruption_hits_report_not_local(setup):
+    """A NaN-corrupt client's own model keeps its true trained values
+    (finite); only the server-visible report is poisoned — with no
+    defense, the Fig. 9 aggregate goes non-finite."""
+    draw = F.FaultDraw(
+        dropped=jnp.zeros(4, bool),
+        staleness=jnp.zeros(4, jnp.int32),
+        corrupt=jnp.asarray([0, F.KIND_NAN, 0, 0], jnp.int32),
+    )
+    new_g, new_l, losses, _ = _round(setup, "vmap", faults=draw)
+    for nl in jax.tree.leaves(new_l):
+        assert bool(jnp.all(jnp.isfinite(nl))), "locals must stay finite"
+    assert np.isfinite(np.asarray(losses)).all()
+    assert not bool(F.tree_finite(new_g)), "undefended aggregate is poisoned"
+
+
+def test_scan_vmap_fault_parity(setup):
+    """Both cohort layouts implement the same fault semantics."""
+    spec = FaultSpec(dropout=0.4, straggler=0.0, corrupt=0.4, corrupt_kind="scale", corrupt_scale=2.0)
+    draw = F.FaultModel(spec, seed=3).draw(1, jnp.arange(4, dtype=jnp.int32))
+    assert bool(draw.dropped.any()) or bool((draw.corrupt != 0).any())
+    gv, lv, lossv, _ = _round(setup, "vmap", faults=draw)
+    gs, ls, losss, _ = _round(setup, "scan", faults=draw)
+    for a, b in zip(jax.tree.leaves(gv), jax.tree.leaves(gs)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lossv), np.asarray(losss), rtol=1e-5)
+
+
+def test_fresh_stale_globals_match_baseline(setup):
+    """Stragglers with an all-fresh history (staleness 0 everywhere, or
+    a history whose every entry is the current global) train exactly the
+    baseline round."""
+    flm, gp, locals_, keys, p, batches, weights = setup
+    base = _round(setup, "vmap")
+    hist = F.init_history(gp, 2)  # every entry == current global
+    draw = F.FaultDraw(
+        dropped=jnp.zeros(4, bool),
+        staleness=jnp.asarray([0, 2, 1, 0], jnp.int32),
+        corrupt=jnp.zeros(4, jnp.int32),
+    )
+    stale_g = F.gather_stale_globals(hist, draw.staleness)
+    out = _round(setup, "vmap", faults=draw, client_globals=stale_g)
+    assert _drift(base[0], out[0]) == 0.0
+    assert _drift(base[1], out[1]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# federation host loop
+# ---------------------------------------------------------------------------
+
+
+def _fed(fl):
+    spec = experiment.ExperimentSpec(
+        fl=fl, dataset=CFG, samples=60 * fl.n_clients, steps_per_round=2
+    )
+    return experiment.build_federation(spec)
+
+
+_COMMON = dict(n_clients=6, clients_per_round=3, max_rounds=4, batch_size=8, seed=11)
+
+
+def test_host_faults_records_and_comm():
+    """Dropped clients shrink n_valid and accrue download-only comm;
+    the same config without faults reports full cohorts."""
+    fl = FLConfig(**_COMMON, fault_spec=FaultSpec(dropout=0.5))
+    fed = _fed(fl)
+    hist = fed.run(rounds=4)
+    n_valid = [r.n_valid for r in hist.records]
+    assert all(0 <= v <= 3 for v in n_valid)
+    assert any(v < 3 for v in n_valid), "0.5 dropout over 12 draws must drop someone"
+    clean = _fed(FLConfig(**_COMMON))
+    h_clean = clean.run(rounds=4)
+    assert all(r.n_valid == len(r.participants) for r in h_clean.records)
+    # dropped clients upload nothing: strictly less comm than the clean
+    # run's up+down on the same cohorts (same seed -> same cohorts)
+    assert hist.total_comm_gb < h_clean.total_comm_gb
+    for rec, rec_c in zip(hist.records, h_clean.records):
+        assert rec.participants == rec_c.participants
+
+
+def test_divergence_guard_rolls_back_and_quarantines():
+    """All-corrupt NaN rounds: the guard keeps the global at its last
+    finite value, quarantines the contributors, and once everyone is
+    quarantined rounds degrade to explicit no-ops (n_valid=0)."""
+    fl = FLConfig(
+        **_COMMON, fault_spec=FaultSpec(corrupt=1.0, corrupt_kind="nan"), divergence_guard=True
+    )
+    fed = _fed(fl)
+    g0 = jax.tree.map(lambda x: np.asarray(x).copy(), fed.global_params)
+    hist = fed.run(rounds=4)
+    assert bool(F.tree_finite(fed.global_params))
+    assert any(r.rolled_back for r in hist.records)
+    assert fed.quarantined.any()
+    for x, y in zip(jax.tree.leaves(g0), jax.tree.leaves(fed.global_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    n_q = int(fed.quarantined.sum())
+    if n_q == fl.n_clients:  # pool emptied -> no-op records
+        assert hist.records[-1].n_valid == 0
+        assert hist.records[-1].participants == []
+
+
+def test_eval_harness_empty_cohort_guards():
+    """Empty / all-invalid cohorts produce empty loss vectors and a 0.0
+    accuracy instead of a shape error (docs/ROBUSTNESS.md)."""
+    fed = _fed(FLConfig(**_COMMON))
+    assert fed.eval_harness.cohort_test_losses(fed.local_params, np.zeros(0, int)).shape == (0,)
+    assert fed.eval_harness.mean_accuracy(fed.local_params, 0) == 0.0
+
+
+def test_comm_meter_upload_fracs():
+    """CommMeter: upload_fracs=None keeps the legacy x2 formula bitwise;
+    dropped clients pay the download but not the upload."""
+    from repro.core.federation import CommMeter
+
+    rng = np.random.default_rng(0)
+    fr = rng.random(16)
+    m1, m2 = CommMeter(123457, 4), CommMeter(123457, 4)
+    legacy = float(np.sum(fr.astype(np.float64)) * 123457 * 4 * 2 / 1e9)
+    assert m1.round_gb(fr) == legacy
+    rep = rng.random(16) < 0.5
+    both = m2.round_gb(fr, upload_fracs=fr * rep)
+    down = float(np.sum(fr) * 123457 * 4 / 1e9)
+    up = float(np.sum(fr * rep) * 123457 * 4 / 1e9)
+    np.testing.assert_allclose(both, down + up, rtol=1e-12)
+    assert both < legacy
+
+
+# ---------------------------------------------------------------------------
+# fused block driver
+# ---------------------------------------------------------------------------
+
+
+def test_block_faults_match_host_reference():
+    """The fused block's fault semantics (draws, stale globals, dropped
+    clients, guard) replay the per-round host reference exactly."""
+    from repro.core import rounds as rounds_mod
+
+    fl = FLConfig(
+        n_clients=8, clients_per_round=4, max_rounds=6, batch_size=8, seed=3,
+        rounds_per_block=3, on_device_data=True, donate_buffers=False,
+        fault_spec=FaultSpec(
+            dropout=0.3, straggler=0.3, max_staleness=2,
+            corrupt=0.2, corrupt_kind="scale", corrupt_scale=3.0,
+        ),
+    )
+    fed_block, fed_host = _fed(fl), _fed(fl)
+    gp_ref, _, recs = rounds_mod.host_reference_run(fed_host, 6)
+    hist = fed_block.run(rounds=6)
+    assert _drift(gp_ref, fed_block.global_params) == 0.0
+    assert [r.n_valid for r in hist.records] == [int(r["reporting"][r["valid"]].sum()) for r in recs]
+
+
+def test_block_fault_free_result_has_no_fault_fields():
+    """Without faults the BlockResult keeps the pre-fault shape: the
+    fault extras stay None and the fault variant is never built."""
+    fl = FLConfig(
+        n_clients=6, clients_per_round=3, max_rounds=4, batch_size=8, seed=0,
+        rounds_per_block=2, on_device_data=True,
+    )
+    fed = _fed(fl)
+    runner = fed._ensure_block_runner()
+    assert not runner._faulty and runner._jit_faulty is None
+    gp, store, res = runner.run_block(
+        0, fed.global_params, fed.local_params,
+        np.full(6, np.inf, np.float32), np.zeros(6, bool), t_limit=4,
+    )
+    assert res.dropped is None and res.rolled_back is None and res.quarantined is None

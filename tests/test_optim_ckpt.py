@@ -88,3 +88,41 @@ def test_checkpoint_shape_mismatch_raises(tmp_path):
     ckpt.save_tree(str(tmp_path), 0, {"x": jnp.ones((2, 2))})
     with pytest.raises(ValueError):
         ckpt.restore_tree(str(tmp_path), 0, {"x": jnp.ones((3, 2))})
+
+
+def test_checkpoint_bf16_bitwise_roundtrip(tmp_path):
+    """Extension dtypes (numpy kind 'V') survive the npz round-trip
+    bit-for-bit: stored as uintN views, viewed back via the sidecar's
+    recorded dtype (docs/ROBUSTNESS.md)."""
+    tree = {
+        "w": (jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4) / 7.0).astype(jnp.bfloat16),
+        "b": jnp.linspace(-1.0, 1.0, 5, dtype=jnp.float32),
+    }
+    ckpt.save_tree(str(tmp_path), 2, tree)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    back = ckpt.restore_tree(str(tmp_path), 2, like)
+    assert back["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(tree["w"]).view(np.uint16), np.asarray(back["w"]).view(np.uint16)
+    )
+    np.testing.assert_array_equal(np.asarray(tree["b"]), np.asarray(back["b"]))
+
+
+def test_checkpoint_latest_step_with_gaps(tmp_path):
+    """latest_step picks the max over a gapped step set and ignores
+    foreign files in the directory."""
+    for s in (0, 3, 17, 9):
+        ckpt.save_tree(str(tmp_path), s, {"x": jnp.ones(2) * s})
+    (tmp_path / "step_notanumber.npz.bak").write_text("junk")
+    (tmp_path / "other.npz").write_bytes(b"")
+    assert ckpt.latest_step(str(tmp_path)) == 17
+    back = ckpt.restore_tree(str(tmp_path), 17, {"x": jnp.ones(2)})
+    np.testing.assert_array_equal(np.asarray(back["x"]), 17.0)
+
+
+def test_checkpoint_mismatched_treedef_message(tmp_path):
+    """A template whose treedef doesn't match the saved one fails with
+    an error that names the missing leaf and the saved leaves."""
+    ckpt.save_tree(str(tmp_path), 0, {"layer": {"w": jnp.ones((2, 2))}})
+    with pytest.raises(KeyError, match=r"layer/w"):
+        ckpt.restore_tree(str(tmp_path), 0, {"layer": {"kernel": jnp.ones((2, 2))}})

@@ -1,0 +1,220 @@
+"""Robust aggregation (docs/ROBUSTNESS.md): norm defenses and the
+coordinate-wise trimmed mean, on and off the kernel substrate.
+
+Pins:
+
+  1. ``masked_update_norms`` measures exactly the masked update l2;
+  2. norm_reject zeroes rejected clients *and* substitutes their values
+     (0·NaN = NaN would otherwise poison the numerator); a round where
+     every client is rejected keeps the old global bitwise;
+  3. norm_clip scales oversized updates onto the clip sphere;
+  4. the trimmed mean drops the k largest/smallest finite participants
+     per coordinate, keeps the old global where too few survive, and the
+     Pallas kernel (interpret mode on CPU) matches the jnp reference
+     bit-for-bit;
+  5. wrapped into a round, a Byzantine client moves the defended global
+     a tiny distance while the undefended one diverges.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fedspu
+from repro.kernels import ops
+from repro.models import cnn
+from repro.strategies import get_strategy
+from repro.strategies.robust import RobustAggregate, masked_update_norms, robust_wrap
+
+CFG = cnn.EMNIST_CNN
+
+
+def _drift(a, b):
+    return max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+# ---------------------------------------------------------------------------
+# norms + norm defenses on a hand-built tree
+# ---------------------------------------------------------------------------
+
+
+def _toy():
+    g = {"w": jnp.zeros((4, 8)), "b": jnp.zeros((8,))}
+    C = 3
+    rng = np.random.default_rng(0)
+    trained = {
+        "w": jnp.asarray(rng.normal(size=(C, 4, 8)) * 0.1, jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(C, 8)) * 0.1, jnp.float32),
+    }
+    masks = {
+        "w": jnp.ones((C, 4, 8), bool),
+        "b": True,  # True-leaf: fully active (normalize_mask_tree idiom)
+    }
+    weights = jnp.ones((C,), jnp.float32)
+    return g, trained, masks, weights
+
+
+def test_masked_update_norms_exact():
+    g, trained, masks, _ = _toy()
+    norms = np.asarray(masked_update_norms(g, trained, masks))
+    for c in range(3):
+        want = np.sqrt(
+            np.sum(np.asarray(trained["w"][c]) ** 2) + np.sum(np.asarray(trained["b"][c]) ** 2)
+        )
+        np.testing.assert_allclose(norms[c], want, rtol=1e-6)
+    # garbage outside the mask is invisible
+    masks2 = dict(masks, w=masks["w"].at[:, 0, :].set(False))
+    poisoned = jax.tree.map(lambda x: x, trained)
+    poisoned["w"] = trained["w"].at[:, 0, :].set(jnp.nan)
+    norms2 = np.asarray(masked_update_norms(g, poisoned, masks2))
+    assert np.isfinite(norms2).all()
+
+
+def test_norm_reject_zero_survivors_is_noop():
+    """Every client rejected (NaN reports) -> the old global, bitwise."""
+    g, trained, masks, weights = _toy()
+    g = {"w": jnp.full((4, 8), 0.25), "b": jnp.full((8,), -1.5)}
+    nan_reports = jax.tree.map(lambda x: jnp.full_like(x, jnp.nan), trained)
+    agg = RobustAggregate("fedspu", "norm_reject", clip=10.0)
+    out = agg.aggregate(None, g, nan_reports, None, weights, mask_trees=masks)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(g)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_norm_reject_drops_only_outliers():
+    g, trained, masks, weights = _toy()
+    big = jax.tree.map(lambda x: x, trained)
+    big["w"] = trained["w"].at[1].mul(1e4)  # client 1 oversized
+    agg = RobustAggregate("fedspu", "norm_reject", clip=5.0)
+    out = agg.aggregate(None, g, big, None, weights, mask_trees=masks)
+    # identical to aggregating only clients 0 and 2
+    ref = ops.masked_aggregate_tree(g, trained, masks, weights * jnp.asarray([1.0, 0.0, 1.0]))
+    assert _drift(out, ref) == 0.0
+
+
+def test_norm_clip_scales_onto_sphere():
+    g, trained, masks, weights = _toy()
+    clip = 0.1
+    agg = RobustAggregate("fedspu", "norm_clip", clip=clip)
+    out = agg.aggregate(None, g, trained, None, weights, mask_trees=masks)
+    norms = np.asarray(masked_update_norms(g, trained, masks))
+    factor = np.minimum(1.0, clip / norms)
+    scaled = {
+        "w": trained["w"] * jnp.asarray(factor)[:, None, None],
+        "b": trained["b"] * jnp.asarray(factor)[:, None],
+    }
+    ref = ops.masked_aggregate_tree(g, scaled, masks, weights)
+    assert _drift(out, ref) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# trimmed mean
+# ---------------------------------------------------------------------------
+
+
+def test_trimmed_mean_drops_extremes_per_coordinate():
+    """k=1 over 5 clients: the max and min participant are excluded at
+    every coordinate — one Byzantine value never moves the estimate."""
+    C, m, n = 5, 6, 10
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    w = jnp.asarray(g[None] + rng.normal(size=(C, m, n)).astype(np.float32) * 0.01)
+    w = w.at[3].set(1e6)  # Byzantine
+    masks = jnp.ones((C, m), bool)
+    weights = jnp.ones((C,), jnp.float32)
+    out = np.asarray(ops.masked_trimmed_aggregate(w, masks, weights, g, k=1, mode="ref"))
+    assert np.abs(out - np.asarray(g)).max() < 0.1
+    # NaN Byzantine is excluded the same way (non-finite never participates)
+    w_nan = w.at[3].set(jnp.nan)
+    out2 = np.asarray(ops.masked_trimmed_aggregate(w_nan, masks, weights, g, k=1, mode="ref"))
+    assert np.isfinite(out2).all()
+
+
+def test_trimmed_mean_too_few_participants_keeps_global():
+    """<= 2k participating clients at a coordinate -> old global there."""
+    C, m, n = 2, 4, 6
+    g = jnp.full((m, n), 7.0)
+    w = jnp.zeros((C, m, n))
+    out = np.asarray(
+        ops.masked_trimmed_aggregate(w, jnp.ones((C, m), bool), jnp.ones(C), g, k=1, mode="ref")
+    )
+    np.testing.assert_array_equal(out, 7.0)
+
+
+def test_trimmed_kernel_matches_reference_bitwise():
+    """The Pallas trimmed-mean kernel (interpret mode on CPU) and the
+    jnp reference share the argmax-extraction helper — bit-identical."""
+    C, m, n = 6, 40, 70
+    rng = np.random.default_rng(2)
+    g = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(C, m, n)), jnp.float32)
+    w = w.at[2].set(jnp.nan)
+    masks = jnp.asarray(rng.random((C, m)) < 0.8)
+    weights = jnp.asarray(rng.random(C) + 0.5, jnp.float32)
+    ref = np.asarray(ops.masked_trimmed_aggregate(w, masks, weights, g, k=1, mode="ref"))
+    pal = np.asarray(ops.masked_trimmed_aggregate(w, masks, weights, g, k=1, mode="interpret"))
+    np.testing.assert_array_equal(ref, pal)
+
+
+# ---------------------------------------------------------------------------
+# wrapper plumbing + end-to-end round
+# ---------------------------------------------------------------------------
+
+
+def test_robust_wrap_validation_and_name():
+    s = robust_wrap("fedspu", "trimmed_mean", trim_k=2)
+    assert s.name == "fedspu+trimmed_mean" and s.trim_k == 2
+    assert s.inner is get_strategy("fedspu")
+    with pytest.raises(ValueError, match="unknown robust kind"):
+        robust_wrap("fedspu", "median")
+    with pytest.raises(ValueError, match="trim_k"):
+        robust_wrap("fedspu", "trimmed_mean", trim_k=0)
+
+
+def test_round_with_byzantine_client_defended():
+    """One NaN client in a cohort: the plain Fig. 9 aggregate is
+    poisoned; norm_reject and trimmed_mean both keep the global finite
+    and close to the clean aggregate."""
+    from repro.core import faults as F
+
+    flm = fedspu.bind_cnn(CFG)
+    gp = cnn.init_params(CFG, jax.random.PRNGKey(0))
+    C, steps, bs = 4, 2, 8
+    rng = np.random.default_rng(0)
+    locals_ = jax.tree.map(
+        lambda x: x[None] + 0.01 * jnp.asarray(rng.normal(size=(C,) + x.shape), x.dtype), gp
+    )
+    keys = jax.random.split(jax.random.PRNGKey(1), C)
+    batches = {
+        "x": jnp.asarray(rng.normal(size=(C, steps, bs) + CFG.in_shape), jnp.float32),
+        "y": jnp.asarray(rng.integers(0, CFG.n_classes, (C, steps, bs)), jnp.int32),
+    }
+    weights = jnp.asarray(rng.random(C) + 0.5, jnp.float32)
+    p = jnp.asarray([0.5, 0.5, 0.8, 1.0])
+    draw = F.FaultDraw(
+        dropped=jnp.zeros(C, bool),
+        staleness=jnp.zeros(C, jnp.int32),
+        corrupt=jnp.asarray([0, F.KIND_NAN, 0, 0], jnp.int32),
+    )
+
+    def run(strategy, faults=None):
+        kw = {} if faults is None else {"faults": faults}
+        fn = jax.jit(
+            lambda g, l, k, pr, b, w: fedspu.fl_round_vmap(
+                flm, g, l, k, pr, b, w, strategy, 0.05, **kw
+            )
+        )
+        return fn(gp, locals_, keys, p, batches, weights)[0]
+
+    clean = run(get_strategy("fedspu"))
+    poisoned = run(get_strategy("fedspu"), draw)
+    assert not bool(F.tree_finite(poisoned))
+    for kind in ("norm_reject", "trimmed_mean"):
+        defended = run(robust_wrap("fedspu", kind, clip=10.0), draw)
+        assert bool(F.tree_finite(defended)), kind
+        # near the clean aggregate (the defense loses at most the
+        # Byzantine client's honest share, never gains its poison)
+        assert _drift(defended, clean) < 0.2, kind
